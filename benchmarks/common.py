@@ -1,0 +1,33 @@
+"""Shared benchmark helpers: the paper's experimental platform (GPU A for
+decode, GPU B for prefill, Llama2-7B) driven through the event simulator."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import get_config
+from repro.core.planner.events import SimResult, simulate
+from repro.core.planner.hardware import GPU_A, GPU_B
+from repro.core.planner.simulator import InstanceModel, ParallelStrategy
+from repro.core.planner.workload import Workload
+
+CFG = get_config("llama2-7b")
+
+
+def models():
+    """(P on GPU B — compute-strong, D on GPU A — HBM-strong)."""
+    return (InstanceModel(CFG, GPU_B, ParallelStrategy()),
+            InstanceModel(CFG, GPU_A, ParallelStrategy()))
+
+
+def run(wl: Workload, n_p: int = 1, n_d: int = 1, mode: str = "disagg",
+        duration_s: float = 120.0) -> SimResult:
+    mP, mD = models()
+    return simulate(CFG, wl, p_model=mP, d_model=mD, n_prefill=n_p,
+                    n_decode=n_d, mode=mode, duration_s=duration_s)
+
+
+def row(label: str, r: SimResult) -> str:
+    return (f"{label:28s} ttft {r.ttft_mean()*1e3:8.1f} ms   "
+            f"tpot {r.tpot_mean()*1e3:7.2f} ms   "
+            f"tput {r.throughput_tok_s():8.1f} tok/s   "
+            f"done {r.completed()}")

@@ -1,0 +1,47 @@
+"""Paper Fig. 6 — influence of context length (P:D = 1:1, QPS 2).
+
+Claims checked: TTFT grows with input length and is ~flat in output length;
+TPOT grows with both (decode is memory-bound over the full KV); throughput
+falls as context grows.
+"""
+from __future__ import annotations
+
+from repro.core.planner.workload import PAPER_CONTEXTS, Workload
+
+from benchmarks.common import row, run
+
+
+def main(duration: float = 120.0) -> dict:
+    print("== Fig. 6: context-length sweep (1P1D, QPS 2) ==")
+    out = {}
+    cap = {}
+    for (i, o) in PAPER_CONTEXTS:
+        wl = Workload(qps=2.0, input_len=i, output_len=o)
+        r = run(wl, duration_s=duration)
+        out[(i, o)] = r
+        # capacity: saturating arrival rate → tokens/s at the roofline of
+        # the pair (the regime where the paper's throughput plot lives)
+        sat = run(Workload(qps=30.0, input_len=i, output_len=o),
+                  duration_s=duration / 2)
+        cap[(i, o)] = sat.throughput_tok_s() / (i + o) * o  # decode tokens
+        print(row(f"{i}+{o}", r) + f"   capacity {cap[(i, o)]:7.0f} tok/s")
+
+    ttft = {k: v.ttft_mean() for k, v in out.items()}
+    tpot = {k: v.tpot_mean() for k, v in out.items()}
+    checks = {
+        "ttft grows with input": ttft[(1024, 1024)] > ttft[(256, 256)] * 1.5,
+        "ttft flat in output":
+            abs(ttft[(512, 1024)] - ttft[(512, 512)])
+            < 0.35 * ttft[(512, 512)] + 1e-4,
+        "tpot grows with context": tpot[(1024, 1024)] > tpot[(256, 256)],
+        "capacity falls with context":
+            cap[(1024, 1024)] < cap[(256, 256)],
+    }
+    for k, v in checks.items():
+        print(f"  [{'ok' if v else 'X'}] {k}")
+    assert all(checks.values()), checks
+    return {"ttft": ttft, "capacity": cap}
+
+
+if __name__ == "__main__":
+    main()

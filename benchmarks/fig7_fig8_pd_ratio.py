@@ -1,0 +1,58 @@
+"""Paper Figs. 7-8 — influence of the P:D ratio.
+
+Fig. 7 (256+256, QPS 2): short context saturates — 2P1D ≈ 3P1D and
+1P2D ≈ 1P3D (adding instances past the bottleneck buys nothing).
+Fig. 8 (1024+1024): P-bound regime — the paper's stated condition is that
+"the P instances cannot handle the requests", i.e. arrivals saturate one
+prefill GPU. The paper reaches that at QPS 3 on its platform; our modeled
+GPU B prefills 1024 tokens in ~51 ms, so the same regime needs the QPS
+scaled to ≳1/l_p (hardware adaptation, not a different experiment). Both
+the paper's literal QPS 3 point and the saturating point are reported; the
+claim ("adding P produces an exponential TTFT reduction") is checked in
+the saturating regime where it is defined.
+"""
+from __future__ import annotations
+
+from repro.core.planner.workload import FIG7, FIG8, Workload
+
+from benchmarks.common import models, row, run
+
+RATIOS = [(1, 1), (2, 1), (3, 1), (1, 2), (1, 3)]
+
+
+def main(duration: float = 120.0) -> dict:
+    mP, _ = models()
+    qps_sat = 1.25 / mP.prefill_latency(FIG8.input_len)
+    fig8_sat = Workload(qps=round(qps_sat, 1), input_len=FIG8.input_len,
+                        output_len=FIG8.output_len)
+    res = {}
+    for name, wl in (("Fig. 7 (256+256 QPS2)", FIG7),
+                     ("Fig. 8 (1024+1024 QPS3, paper point)", FIG8),
+                     (f"Fig. 8 regime (1024+1024 QPS{fig8_sat.qps:g}, "
+                      f"P-saturating)", fig8_sat)):
+        print(f"== {name}: P:D ratio sweep ==")
+        for (n_p, n_d) in RATIOS:
+            r = run(wl, n_p=n_p, n_d=n_d, duration_s=duration)
+            res[(wl.qps, n_p, n_d)] = r
+            print(row(f"{n_p}P{n_d}D", r))
+
+    # Fig. 7 saturation claims
+    t7 = {k[1:]: v.throughput_tok_s() for k, v in res.items()
+          if k[0] == FIG7.qps}
+    sat_p = abs(t7[(2, 1)] - t7[(3, 1)]) / t7[(2, 1)] < 0.05
+    sat_d = abs(t7[(1, 2)] - t7[(1, 3)]) / t7[(1, 2)] < 0.05
+    # Fig. 8: more P cuts TTFT sharply once P saturates
+    f8_1p = res[(fig8_sat.qps, 1, 1)].ttft_mean()
+    f8_2p = res[(fig8_sat.qps, 2, 1)].ttft_mean()
+    f8_3p = res[(fig8_sat.qps, 3, 1)].ttft_mean()
+    p_helps = f8_2p < 0.3 * f8_1p and f8_3p <= f8_2p * 1.05
+    for k, v in (("Fig7: 2P1D ≈ 3P1D", sat_p), ("Fig7: 1P2D ≈ 1P3D", sat_d),
+                 ("Fig8: P scaling collapses TTFT once P saturates",
+                  p_helps)):
+        print(f"  [{'ok' if v else 'X'}] {k}")
+    assert sat_p and sat_d and p_helps
+    return {"fig7": t7, "fig8_ttft": (f8_1p, f8_2p, f8_3p)}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper §IV — the joint-optimization output: parallel strategy + P:D
+instance allocation per workload, on the paper's GPU pair and on TPU v5e.
+"""
+from __future__ import annotations
+
+from repro.configs.base import get_config
+from repro.core.planner.hardware import GPU_A, GPU_B, TPU_V5E
+from repro.core.planner.optimizer import plan_deployment
+from repro.core.planner.workload import Workload
+
+WORKLOADS = [
+    Workload(qps=2.0, input_len=256, output_len=256),
+    Workload(qps=2.0, input_len=1024, output_len=1024),
+    Workload(qps=3.0, input_len=512, output_len=1024),
+    Workload(qps=8.0, input_len=1024, output_len=512),
+]
+
+
+def main() -> list:
+    rows = []
+    for model in ("llama2-7b", "qwen3-4b", "phi3-medium-14b"):
+        cfg = get_config(model)
+        for p_hw, d_hw, label in ((GPU_B, GPU_A, "B→A"),
+                                  (TPU_V5E, TPU_V5E, "v5e")):
+            print(f"== {model} on {label} ==")
+            for wl in WORKLOADS:
+                try:
+                    plan = plan_deployment(cfg, wl, p_hw=p_hw, d_hw=d_hw)
+                except ValueError as e:
+                    print(f"{wl.label():22s} INFEASIBLE ({str(e)[:60]})")
+                    continue
+                print(f"{wl.label():22s} {plan.ratio():7s} "
+                      f"P={plan.prefill.strategy.label():14s} "
+                      f"D={plan.decode.strategy.label():14s} "
+                      f"batch={plan.decode.batch:4d} "
+                      f"cost={plan.cost_per_hour:7.1f}$/h "
+                      f"qps_cap={plan.qps_capacity:6.2f}")
+                assert plan.qps_capacity >= wl.qps * 0.99
+                rows.append((model, label, wl.label(), plan.ratio(),
+                             plan.cost_per_hour))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

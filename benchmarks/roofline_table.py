@@ -1,0 +1,70 @@
+"""Render the §Roofline table from the dry-run records
+(results/dryrun.jsonl — produced by `python -m repro.launch.dryrun --all
+--mesh both --probes`)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.jsonl")
+
+
+def load(path: str = RESULTS) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    recs: Dict[tuple, dict] = {}
+    with open(path) as fh:
+        for line in fh:
+            r = json.loads(line)
+            if r.get("kind") == "handoff":
+                continue
+            key = (r["arch"], r["shape"], r["mesh"])
+            # field-wise merge: later records refresh only what they carry
+            merged = recs.get(key, {})
+            merged.update({k: v for k, v in r.items()
+                           if v not in (None, {}, [])})
+            recs[key] = merged
+    return list(recs.values())
+
+
+def fmt_row(r: dict) -> str:
+    rl = r.get("roofline") or {}
+    if r.get("skip"):
+        return (f"| {r['arch']} | {r['shape']} | skip | — | — | — | — | — | "
+                f"{r['skip'].split(':')[0]} |")
+    if not rl or "seconds" not in rl:
+        return (f"| {r['arch']} | {r['shape']} | {r['mode']} | — | — | — | "
+                f"— | — | compiled |")
+    s = rl["seconds"]
+    return (f"| {r['arch']} | {r['shape']} | {r['mode']} "
+            f"| {s['compute']*1e3:.1f} | {s['memory']*1e3:.1f} "
+            f"| {s['collective']*1e3:.1f} | {rl['dominant']} "
+            f"| {rl['useful_ratio']:.2f} "
+            f"| mem {r['memory_analysis'].get('total_minus_aliased', 0)/2**30:.1f} GiB |")
+
+
+def main(path: str = RESULTS) -> None:
+    recs = [r for r in load(path) if r["mesh"] == "single"]
+    recs.sort(key=lambda r: (r["arch"], r["shape"]))
+    if not recs:
+        print("(no dry-run records yet — run repro.launch.dryrun --all "
+              "--probes first)")
+        return
+    print("| arch | shape | mode | compute ms | memory ms | collective ms "
+          "| bound | useful | fits |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(fmt_row(r))
+    done = [r for r in recs if (r.get("roofline") or {}).get("seconds")]
+    if done:
+        n_dom: Dict[str, int] = {}
+        for r in done:
+            n_dom[r["roofline"]["dominant"]] = \
+                n_dom.get(r["roofline"]["dominant"], 0) + 1
+        print(f"\nbottleneck census over {len(done)} analyzed cells: {n_dom}")
+
+
+if __name__ == "__main__":
+    main()

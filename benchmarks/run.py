@@ -1,0 +1,37 @@
+"""Benchmark driver: one module per paper table/figure + kernel micro +
+the roofline table. ``python -m benchmarks.run [--fast]``."""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="shorter simulated duration")
+    args = ap.parse_args()
+    dur = 40.0 if args.fast else 120.0
+
+    from benchmarks import (fig6_context_lengths, fig7_fig8_pd_ratio,
+                            fig9_fig10_hetero, kernels_micro, planner_table,
+                            roofline_table)
+
+    t0 = time.time()
+    fig6_context_lengths.main(duration=dur)
+    print()
+    fig7_fig8_pd_ratio.main(duration=dur)
+    print()
+    fig9_fig10_hetero.main(duration=dur)
+    print()
+    planner_table.main()
+    print()
+    kernels_micro.main()
+    print()
+    print("== roofline table (from dry-run records) ==")
+    roofline_table.main()
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

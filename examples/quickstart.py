@@ -1,0 +1,64 @@
+"""60-second tour: build a tiny model, serve one request through a
+heterogeneous P→D handoff, and plan a deployment.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.compat.precision import WireFormat
+from repro.core.disagg import DisaggPipeline
+from repro.core.kv_transfer import TransferEngine
+from repro.models import model as M
+from repro.serving.engine import Engine, VendorProfile
+from repro.serving.request import Request
+from repro.serving.scheduler import GlobalScheduler
+from repro.serving.server import Server
+
+# 1. a tiny dense LM (the same ModelConfig drives the 32B assigned archs)
+cfg = ModelConfig(name="tiny", family="dense", num_layers=3, d_model=64,
+                  num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=256, param_dtype="float32",
+                  compute_dtype="float32")
+params = M.init_params(jax.random.key(0), cfg)
+
+# 2. two "vendors": P has block_size 8 / head-major layout / TP=2,
+#    D has block_size 4 / token-major layout / TP=1 — the compat module
+#    aligns them at handoff (paper §III-B).
+p_inst = Engine("P0", cfg, params,
+                VendorProfile("vendorB", block_size=8, layout="nhbd",
+                              kv_dtype="float32", tp=2),
+                num_blocks=64, max_batch=4, max_seq_len=64, role="prefill")
+d_inst = Engine("D0", cfg, params,
+                VendorProfile("vendorA", block_size=4, layout="nbhd",
+                              kv_dtype="float32", tp=1),
+                num_blocks=64, max_batch=4, max_seq_len=64, role="decode")
+
+pipeline = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
+sched = GlobalScheduler(pipeline)
+sched.add_instance(p_inst)
+sched.add_instance(d_inst)
+server = Server(sched)
+
+# 3. serve a request
+req = Request(req_id="hello",
+              prompt=np.asarray([3, 1, 4, 1, 5, 9, 2, 6], np.int32),
+              max_new_tokens=8)
+result = server.serve([req])
+print("tokens:", req.output_tokens)
+print("wire bytes through the compat module:",
+      pipeline.transfer.stats.bytes_moved)
+print("summary:", result.summary())
+
+# 4. plan a deployment for the paper's GPU pair
+from repro.configs.base import get_config
+from repro.core.planner.hardware import GPU_A, GPU_B
+from repro.core.planner.optimizer import plan_deployment
+from repro.core.planner.workload import Workload
+
+plan = plan_deployment(get_config("llama2-7b"),
+                       Workload(qps=3.0, input_len=512, output_len=1024),
+                       p_hw=GPU_B, d_hw=GPU_A)
+print(f"plan: {plan.ratio()}  P={plan.prefill.strategy.label()} "
+      f"D={plan.decode.strategy.label()} cost={plan.cost_per_hour:.1f}$/h")

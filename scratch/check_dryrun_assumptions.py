@@ -1,0 +1,74 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import numpy as np
+
+print("devices:", len(jax.devices()))
+
+# --- 1. cost_analysis vs scan trip count -------------------------------
+def body(x, w):
+    return x @ w, None
+
+def scanned(x, ws):
+    y, _ = jax.lax.scan(body, x, ws)
+    return y
+
+def unrolled(x, ws):
+    for i in range(ws.shape[0]):
+        x = x @ ws[i]
+    return x
+
+x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+cs = jax.jit(scanned).lower(x, ws).compile().cost_analysis()
+cu = jax.jit(unrolled).lower(x, ws).compile().cost_analysis()
+print("scan flops:", cs.get("flops"), " unrolled flops:", cu.get("flops"),
+      " expected:", 8 * 2 * 128 * 256 * 256)
+
+# --- 2. mesh 512 + uneven sharding (8 over 16) --------------------------
+mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+print("mesh ok:", mesh.shape)
+
+w = jax.ShapeDtypeStruct((1024, 8, 128), jnp.bfloat16)   # kv=8 over model=16
+xin = jax.ShapeDtypeStruct((32, 64, 1024), jnp.bfloat16)
+
+def f(x, w):
+    return jnp.einsum("bsd,dhk->bshk", x, w)
+
+shw = NamedSharding(mesh, P(None, "model", None))
+shx = NamedSharding(mesh, P(("pod", "data"), None, None))
+try:
+    lowered = jax.jit(f, in_shardings=(shx, shw)).lower(xin, w)
+    comp = lowered.compile()
+    print("uneven shard ok; per-dev flops:", comp.cost_analysis().get("flops"))
+except Exception as e:
+    print("uneven shard FAILED:", type(e).__name__, str(e)[:200])
+
+# --- 3. fp8 on cpu ------------------------------------------------------
+try:
+    def g(k):
+        return k.astype(jnp.float32).sum()
+    kk = jax.ShapeDtypeStruct((64, 64), jnp.float8_e4m3fn)
+    jax.jit(g).lower(kk).compile()
+    print("fp8 compile ok")
+except Exception as e:
+    print("fp8 FAILED:", type(e).__name__, str(e)[:200])
+
+# --- 4. memory_analysis fields ------------------------------------------
+ma = comp.memory_analysis()
+print("memory_analysis:", ma)
+
+# --- 5. collective ops in HLO text ---------------------------------------
+def h(x, w):
+    y = jnp.einsum("bsd,dhk->bshk", x, w)
+    return y.sum(axis=(1, 2, 3))
+
+lw = jax.jit(h, in_shardings=(shx, shw), out_shardings=NamedSharding(mesh, P(("pod","data")))).lower(xin, w)
+txt = lw.compile().as_text()
+import re
+colls = re.findall(r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)[^\n]*", txt)
+print("collectives found:", len(colls))
+for c in colls[:5]:
+    print("  ", c[:160])

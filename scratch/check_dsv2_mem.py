@@ -1,0 +1,32 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re
+import jax
+
+from repro.launch.cells import get_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_artifacts
+
+cell = get_cell("deepseek-v2-lite-16b", "prefill_32k")
+mesh = make_production_mesh()
+art = make_artifacts(cell, mesh, layer_override={"num_layers": 2})
+compiled = art.lower().compile()
+ma = compiled.memory_analysis()
+print("temp GiB (2 layers):", ma.temp_size_in_bytes / 2**30)
+
+txt = compiled.as_text()
+BYTES = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1, "f8e4m3fn": 1}
+sizes = {}
+for m in re.finditer(r"(\w+)\[([\d,]+)\]", txt):
+    dt, dims = m.group(1), m.group(2)
+    if dt not in BYTES:
+        continue
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    b = n * BYTES[dt]
+    key = f"{dt}[{dims}]"
+    if b > 100e6:
+        sizes[key] = max(sizes.get(key, 0), b)
+for k, v in sorted(sizes.items(), key=lambda kv: -kv[1])[:15]:
+    print(f"{v/2**30:8.2f} GiB  {k}")

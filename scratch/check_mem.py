@@ -1,0 +1,50 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+import numpy as np
+
+from repro.launch.cells import get_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_artifacts
+
+cell = get_cell("qwen3-4b", "decode_32k")
+mesh = make_production_mesh()
+art = make_artifacts(cell, mesh)
+
+# per-leaf bytes per chip, by argument group
+def tree_bytes_per_chip(abs_tree, sh_tree, label):
+    tot = 0
+    items = []
+    for (kp, leaf), sh in zip(
+            jax.tree_util.tree_flatten_with_path(abs_tree)[0],
+            jax.tree.leaves(sh_tree, is_leaf=lambda x: hasattr(x, "spec"))):
+        n = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        # shard fraction
+        frac = 1.0
+        spec = sh.spec
+        for d, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            frac /= size
+        b = n * frac
+        tot += b
+        items.append((b, jax.tree_util.keystr(kp), spec))
+    items.sort(reverse=True)
+    print(f"== {label}: {tot/2**30:.2f} GiB/chip")
+    for b, k, spec in items[:6]:
+        print(f"   {b/2**20:9.1f} MiB  {k}  {spec}")
+    return tot
+
+p = tree_bytes_per_chip(art.abstract_args[0], art.in_shardings[0], "params")
+c = tree_bytes_per_chip(art.abstract_args[1], art.in_shardings[1], "caches")
+
+lowered = art.lower()
+compiled = lowered.compile()
+ma = compiled.memory_analysis()
+for f in ("argument_size_in_bytes", "output_size_in_bytes",
+          "temp_size_in_bytes", "alias_size_in_bytes"):
+    print(f, getattr(ma, f, None) / 2**30, "GiB")

@@ -1,0 +1,113 @@
+"""§Perf hillclimb driver — three selected cells, hypothesis-driven
+variants, before/after roofline terms. Appends records to
+results/hillclimb.jsonl.
+
+  PYTHONPATH=src python scratch/hillclimb.py [cellA cellB ...]
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+                           "while-loop-expensive-invariant-code-motion")
+import dataclasses
+import json
+import sys
+import time
+
+from repro.launch.cells import get_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_artifacts
+from repro.roofline import analysis as RA
+
+MESH = make_production_mesh()
+OUT = "results/hillclimb.jsonl"
+
+
+def measure(cell, label, **kw):
+    """Probe-extrapolated roofline terms + full-artifact memory for a
+    variant of a cell."""
+    t0 = time.time()
+    plan = RA.probe_plan(cell.arch)
+    acc = []
+    for override, coeff in plan:
+        art = make_artifacts(cell, MESH, unroll=True,
+                             layer_override=override, **kw)
+        compiled = art.lower().compile()
+        acc.append((RA.analyze_compiled(compiled, 16), coeff))
+    terms = RA.roofline_for_cell(acc)
+    # full artifact: memory proof
+    art = make_artifacts(cell, MESH, **kw)
+    ma = art.lower().compile().memory_analysis()
+    tot = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+           + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    s = terms.seconds()
+    rec = {
+        "cell": f"{cell.arch}@{cell.shape}", "variant": label,
+        "kw": {k: str(v) for k, v in kw.items()},
+        "n_micro": cell.n_micro,
+        "compute_s": s["compute"], "memory_s": s["memory"],
+        "memory_raw_s": s["memory_raw"], "collective_s": s["collective"],
+        "dominant": terms.dominant(), "step_time_s": terms.step_time(),
+        "mem_gib": tot / 2**30,
+        "by_kind_mib": {k: round(v / 2**20, 1)
+                        for k, v in terms.by_kind.items()},
+        "wall_s": round(time.time() - t0, 1),
+    }
+    print(f"[{rec['cell']} :: {label}] compute {s['compute']:.3f}s "
+          f"memory {s['memory']:.3f}s (raw {s['memory_raw']:.3f}) "
+          f"collective {s['collective']:.3f}s → {rec['dominant']}, "
+          f"step {rec['step_time_s']:.3f}s, fits {rec['mem_gib']:.1f} GiB "
+          f"({rec['wall_s']:.0f}s)", flush=True)
+    with open(OUT, "a") as fh:
+        fh.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def cell_A_phi3_prefill():
+    """Worst roofline fraction: phi3 prefill_32k (memory 55.8s vs compute
+    3.3s at baseline). Dominant-term attack: chunked-attention accumulator
+    RMW traffic scales with chunk COUNT — quadruple the chunk."""
+    cell = get_cell("phi3-medium-14b", "prefill_32k")
+    base = measure(cell, "baseline(chunk=1024)")
+    # iteration 1: fewer chunks → fewer acc read-modify-writes
+    it1 = measure(cell, "chunk=4096", chunk_size=4096)
+    # iteration 2: push further — 8192 (score buffer grows 8×; check fit)
+    it2 = measure(cell, "chunk=8192", chunk_size=8192)
+    return [base, it1, it2]
+
+
+def cell_B_mixtral_train():
+    """Most collective-bound: mixtral train_4k (collective 12.3s).
+    ZeRO-3 weight all-gathers repeat PER MICROBATCH — fewer micros move
+    fewer weight bytes; sequence-parallel residuals pay the freed
+    activation memory back."""
+    cell = get_cell("mixtral-8x7b", "train_4k")
+    base = measure(cell, "baseline(n_micro=16)")
+    it1 = measure(dataclasses.replace(cell, n_micro=8), "n_micro=8")
+    it2 = measure(dataclasses.replace(cell, n_micro=8),
+                  "n_micro=8+act_seq", act_seq=True)
+    it3 = measure(dataclasses.replace(cell, n_micro=4),
+                  "n_micro=4+act_seq", act_seq=True)
+    return [base, it1, it2, it3]
+
+
+def cell_C_qwen15_decode():
+    """Most paper-representative: qwen1.5-32b decode_32k — one token vs a
+    32k fp8 KV cache (precision-alignment lever). Baseline memory is
+    dominated by fp8→f32 emulation converts (subtracted) and the ideal
+    floor is cache+weights ≈ 14.9 GiB → 18 ms."""
+    cell = get_cell("qwen1.5-32b", "decode_32k")
+    base = measure(cell, "baseline(fp8-kv)")
+    # iteration 1: bf16 cache (paper-faithful precision) for comparison —
+    # memory_analysis will show the capacity blowout that motivated fp8
+    it1 = measure(dataclasses.replace(cell, cache_dtype="bfloat16"),
+                  "bf16-kv(paper-faithful)")
+    return [base, it1]
+
+
+ALL = {"A": cell_A_phi3_prefill, "B": cell_B_mixtral_train,
+       "C": cell_C_qwen15_decode}
+
+if __name__ == "__main__":
+    which = sys.argv[1:] or ["A", "B", "C"]
+    for w in which:
+        ALL[w]()

@@ -1,0 +1,91 @@
+"""Render §Dry-run and §Roofline tables from results/dryrun.jsonl into
+EXPERIMENTS.md (replacing the <!-- DRYRUN_TABLE --> / <!-- ROOFLINE_TABLE -->
+markers)."""
+import json
+import sys
+
+sys.path.insert(0, "benchmarks")
+sys.path.insert(0, "src")
+from benchmarks.roofline_table import load  # noqa: E402
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def dryrun_table(recs):
+    lines = [
+        "Per-cell dry-run evidence (GiB/chip = arguments + outputs + temps "
+        "− aliased; both meshes compile for every non-skipped cell):",
+        "",
+        "| arch | shape | mode | single-pod GiB/chip | multi-pod GiB/chip "
+        "| compile s (single) |",
+        "|---|---|---|---|---|---|",
+    ]
+    by = {}
+    for r in recs:
+        by.setdefault((r["arch"], r["shape"]), {})[r["mesh"]] = r
+    for (arch, shape) in sorted(by, key=lambda k: (k[0], ORDER.index(k[1]))):
+        cell = by[(arch, shape)]
+        r = cell.get("single") or cell.get("multi")
+        if r.get("skip"):
+            lines.append(f"| {arch} | {shape} | — | skip | skip | — "
+                         f"({r['skip'].split(':')[0]}) |")
+            continue
+        s = cell.get("single", {})
+        m = cell.get("multi", {})
+        gs = s.get("memory_analysis", {}).get("total_minus_aliased")
+        gm = m.get("memory_analysis", {}).get("total_minus_aliased")
+        cs = s.get("seconds", {}).get("compile", "—")
+        lines.append(
+            f"| {arch} | {shape} | {r['mode']} "
+            f"| {gs/2**30:.1f} | {gm/2**30 if gm else float('nan'):.1f} "
+            f"| {cs} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    lines = [
+        "| arch | shape | mode | compute s | memory s (corr / raw) "
+        "| collective s | bound | useful | top collective |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    census = {}
+    for r in sorted(recs, key=lambda r: (r["arch"], ORDER.index(r["shape"]))):
+        if r["mesh"] != "single":
+            continue
+        if r.get("skip"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — "
+                         f"| skip | — | — |")
+            continue
+        rl = r.get("roofline") or {}
+        if "seconds" not in rl:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mode']} | — "
+                         f"| — | — | (no probe) | — | — |")
+            continue
+        s = rl["seconds"]
+        top = max(rl.get("by_kind", {"—": 0}).items(),
+                  key=lambda kv: kv[1])[0]
+        census[rl["dominant"]] = census.get(rl["dominant"], 0) + 1
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mode']} "
+            f"| {s['compute']:.3f} | {s['memory']:.3f} / "
+            f"{s.get('memory_raw', s['memory']):.3f} "
+            f"| {s['collective']:.3f} | {rl['dominant']} "
+            f"| {rl['useful_ratio']:.2f} | {top} |")
+    lines.append("")
+    lines.append(f"Bottleneck census: {census}.")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load("results/dryrun.jsonl")
+    text = open("EXPERIMENTS.md").read()
+    text = text.replace("<!-- DRYRUN_TABLE -->", dryrun_table(recs))
+    text = text.replace("<!-- ROOFLINE_TABLE -->",
+                        roofline_table([r for r in recs
+                                        if r["mesh"] == "single"]))
+    open("EXPERIMENTS.md", "w").write(text)
+    print("tables rendered into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

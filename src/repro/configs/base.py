@@ -1,0 +1,245 @@
+"""Model configuration system.
+
+One frozen dataclass covers every assigned architecture family:
+dense / MoE / MLA / enc-dec (audio) / hybrid (RG-LRU) / VLM / SSM.
+Configs are pure data — the model builder in ``repro.models.model``
+interprets them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# Layer-kind tags used in block patterns.
+ATTN = "attn"
+RECURRENT = "rglru"
+SSD = "ssd"
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0            # routed experts
+    num_shared_experts: int = 0     # always-on experts (DeepSeek style)
+    top_k: int = 0
+    d_ff_expert: int = 0            # per-expert hidden dim
+    first_dense_layers: int = 0     # leading layers that use the dense MLP
+    router_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek-V2)."""
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD."""
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk_size: int = 256
+    n_groups: int = 1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class RecurrentConfig:
+    """RG-LRU recurrent block (Griffin / RecurrentGemma)."""
+    lru_width: int = 0              # defaults to d_model if 0
+    d_conv: int = 4
+    block_pattern: Tuple[str, ...] = (RECURRENT, RECURRENT, ATTN)
+    local_window: int = 2048
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Modality frontend STUB: input_specs() provides precomputed embeddings."""
+    kind: str = "none"              # "audio" | "vision" | "none"
+    # audio: conv stem downsampling factor (Whisper: 2 after two conv1d)
+    downsample: int = 2
+    # vision: number of image patch embeddings prepended to the text sequence
+    num_patches: int = 256
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | audio | hybrid | vlm | ssm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 → d_model // num_heads
+    # -- attention flavour ------------------------------------------------
+    attention_kind: str = "full"    # full | sliding | mla | none
+    sliding_window: int = 0         # >0 with attention_kind=="sliding"
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    # -- optional sub-configs ---------------------------------------------
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    recurrent: Optional[RecurrentConfig] = None
+    frontend: FrontendConfig = field(default_factory=FrontendConfig)
+    # -- enc-dec ----------------------------------------------------------
+    encoder_layers: int = 0         # >0 → encoder-decoder (num_layers = decoder)
+    max_source_len: int = 1500      # encoder positions (Whisper: 1500 frames)
+    # -- numerics ---------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # -- citation / provenance --------------------------------------------
+    source: str = ""
+
+    # ------------------------------------------------------------------ #
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe is not None and self.moe.num_experts > 0
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-decoder-layer block kind, length == num_layers."""
+        if self.family == "ssm":
+            return (SSD,) * self.num_layers
+        if self.recurrent is not None:
+            pat = self.recurrent.block_pattern
+            return tuple(pat[i % len(pat)] for i in range(self.num_layers))
+        return (ATTN,) * self.num_layers
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- parameter counting (used by planner + roofline) ------------------ #
+    def param_count(self) -> int:
+        """Exact-ish analytic parameter count (embedding + blocks + head)."""
+        d, v = self.d_model, self.vocab_size
+        n = v * d                       # token embedding
+        if not self.tie_embeddings:
+            n += v * d                  # lm head
+        n += d                          # final norm
+        kinds = self.layer_kinds()
+        for k in kinds:
+            n += self._block_params(k)
+        if self.is_enc_dec:
+            # encoder self-attn blocks + cross-attn in decoder
+            n += self.encoder_layers * self._block_params(ATTN)
+            n += self.num_layers * self._attn_params()      # cross-attn
+            n += self.num_layers * self.d_model              # extra norm
+        return n
+
+    def _attn_params(self) -> int:
+        d, h, kv, hd = self.d_model, self.num_heads, self.num_kv_heads, self.hd
+        if self.attention_kind == "mla":
+            m = self.mla
+            qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+            n = d * h * qk_hd                               # q proj (no q-lora in V2-Lite)
+            n += d * (m.kv_lora_rank + m.qk_rope_head_dim)  # kv down-proj
+            n += m.kv_lora_rank                             # kv-a norm
+            n += m.kv_lora_rank * h * (m.qk_nope_head_dim + m.v_head_dim)  # kv up
+            n += h * m.v_head_dim * d                       # o proj
+            return n
+        n = d * h * hd + 2 * d * kv * hd + h * hd * d
+        if self.qkv_bias:
+            n += h * hd + 2 * kv * hd
+        return n
+
+    def _mlp_params(self, layer_idx_is_moe: bool) -> int:
+        d = self.d_model
+        if layer_idx_is_moe and self.is_moe:
+            e = self.moe
+            per = 3 * d * e.d_ff_expert
+            n = (e.num_experts + e.num_shared_experts) * per
+            n += d * e.num_experts                          # router
+            return n
+        return 3 * d * self.d_ff                            # SwiGLU
+
+    def _block_params(self, kind: str) -> int:
+        d = self.d_model
+        if kind == SSD:
+            s = self.ssm
+            di = s.d_inner(d)
+            nh = s.n_heads(d)
+            g = s.n_groups
+            n = d * (2 * di + 2 * g * s.d_state + nh)       # in_proj (x,z,B,C,dt)
+            n += s.d_conv * (di + 2 * g * s.d_state)        # conv
+            n += nh * 3                                     # A, D, dt_bias
+            n += di                                         # out norm
+            n += di * d                                     # out proj
+            return n + d                                    # block norm
+        if kind == RECURRENT:
+            r = self.recurrent
+            w = r.lru_width or d
+            n = 2 * d * w                                   # x/gate proj
+            n += r.d_conv * w                               # conv
+            n += 3 * w                                      # lru a, input gate params (approx)
+            n += w * d                                      # out proj
+            return n + 2 * d + self._mlp_params(False) + d
+        # attention block
+        n = self._attn_params() + 2 * d
+        moe_layer = self.is_moe
+        n += self._mlp_params(moe_layer)
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared only)."""
+        if not self.is_moe:
+            return self.param_count()
+        e = self.moe
+        full = self.param_count()
+        moe_layers = self.num_layers - e.first_dense_layers
+        per_expert = 3 * self.d_model * e.d_ff_expert
+        inactive = moe_layers * (e.num_experts - e.top_k) * per_expert
+        return full - inactive
+
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    # Import side-effect registration of all shipped configs.
+    from repro import configs as _c  # noqa: F401
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list:
+    from repro import configs as _c  # noqa: F401
+    return sorted(_REGISTRY)

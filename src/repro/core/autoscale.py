@@ -1,0 +1,135 @@
+"""Elastic P:D pool autoscaler — the paper's 'adjust the P-D instance
+ratio' knob made dynamic (§IV benefit scenario #1).
+
+Policy, evaluated per control tick against SLO headroom:
+  * TTFT pressure  (pending prefills per routable P > p_queue_high, or
+    TTFT EMA > slo_ttft × pressure)  → add a P instance
+  * TPOT pressure  (decode slot utilization > d_util_high, or TPOT EMA >
+    slo_tpot × pressure)             → add a D instance
+  * sustained idleness (utilization < low watermark for `cooldown` ticks)
+    → drain the newest surplus instance (never below the planner's
+    baseline ratio)
+
+The planner's DeploymentPlan provides the baseline (n_prefill, n_decode);
+the autoscaler never scales below it — the static optimum is the floor,
+the dynamics handle bursts. Instances are created through a user factory
+(on a real cluster: pod allocation + weight loading; here: Engine()).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.serving.engine import Engine
+from repro.serving.scheduler import GlobalScheduler
+
+
+@dataclasses.dataclass
+class AutoscalerConfig:
+    slo_ttft_s: float = 1.0
+    slo_tpot_s: float = 0.1
+    pressure: float = 0.8          # act at 80% of the SLO
+    p_queue_high: float = 2.0      # pending prefills per routable P
+    d_util_high: float = 0.85      # occupied decode slots fraction
+    low_util: float = 0.15
+    cooldown_ticks: int = 20       # hysteresis for both grow and shrink
+    max_p: int = 8
+    max_d: int = 8
+
+
+@dataclasses.dataclass
+class AutoscalerStats:
+    grew_p: int = 0
+    grew_d: int = 0
+    drained: int = 0
+
+
+class PDAutoscaler:
+    def __init__(self, scheduler: GlobalScheduler,
+                 p_factory: Callable[[str], Engine],
+                 d_factory: Callable[[str], Engine],
+                 baseline_p: int = 1, baseline_d: int = 1,
+                 config: Optional[AutoscalerConfig] = None):
+        self.sched = scheduler
+        self.p_factory = p_factory
+        self.d_factory = d_factory
+        self.baseline_p = baseline_p
+        self.baseline_d = baseline_d
+        self.cfg = config or AutoscalerConfig()
+        self.stats = AutoscalerStats()
+        self._counter = 0
+        self._idle_ticks = 0
+        self._last_grow = -10**9
+        self._tick = 0
+
+    # -- observations ------------------------------------------------------ #
+    def _routable_p(self) -> List[Engine]:
+        return self.sched._routable(self.sched.p_pool)
+
+    def _routable_d(self) -> List[Engine]:
+        return self.sched._routable(self.sched.d_pool)
+
+    def p_queue_depth(self) -> float:
+        ps = self._routable_p()
+        return len(self.sched.pending) / max(len(ps), 1)
+
+    def d_utilization(self) -> float:
+        ds = self._routable_d()
+        if not ds:
+            return 1.0
+        return sum(e.load() for e in ds) / len(ds)
+
+    # -- control ------------------------------------------------------------ #
+    def tick(self) -> Optional[str]:
+        """Run one control decision. Returns the action taken, if any."""
+        self._tick += 1
+        cfg = self.cfg
+        cooled = (self._tick - self._last_grow) >= cfg.cooldown_ticks
+        ttfts = [r.ttft() for r in self.sched.finished[-16:]
+                 if r.ttft() is not None]
+        tpots = [r.tpot() for r in self.sched.finished[-16:]
+                 if r.tpot() is not None]
+        ttft = max(ttfts) if ttfts else 0.0
+        tpot = max(tpots) if tpots else 0.0
+
+        if (self.p_queue_depth() > cfg.p_queue_high
+                or ttft > cfg.slo_ttft_s * cfg.pressure) \
+                and len(self._routable_p()) < cfg.max_p and cooled:
+            name = f"P-auto{self._counter}"
+            self._counter += 1
+            self.sched.add_instance(self.p_factory(name), role="prefill")
+            self.stats.grew_p += 1
+            self._last_grow = self._tick
+            return f"grow-p:{name}"
+
+        if (self.d_utilization() > cfg.d_util_high
+                or tpot > cfg.slo_tpot_s * cfg.pressure) \
+                and len(self._routable_d()) < cfg.max_d and cooled:
+            name = f"D-auto{self._counter}"
+            self._counter += 1
+            self.sched.add_instance(self.d_factory(name), role="decode")
+            self.stats.grew_d += 1
+            self._last_grow = self._tick
+            return f"grow-d:{name}"
+
+        # shrink: sustained idleness, never below the planner baseline
+        busy = self.d_utilization() > cfg.low_util \
+            or self.p_queue_depth() > 0
+        self._idle_ticks = 0 if busy else self._idle_ticks + 1
+        if self._idle_ticks >= cfg.cooldown_ticks:
+            self._idle_ticks = 0
+            surplus_d = [n for n in self.sched.d_pool
+                         if n.startswith("D-auto")
+                         and n not in self.sched._draining]
+            surplus_p = [n for n in self.sched.p_pool
+                         if n.startswith("P-auto")
+                         and n not in self.sched._draining]
+            if len(self._routable_d()) > self.baseline_d and surplus_d:
+                self.sched.remove_instance(surplus_d[-1])
+                self.stats.drained += 1
+                return f"drain:{surplus_d[-1]}"
+            if len(self._routable_p()) > self.baseline_p and surplus_p:
+                self.sched.remove_instance(surplus_p[-1])
+                self.stats.drained += 1
+                return f"drain:{surplus_p[-1]}"
+        return None

@@ -1,0 +1,3 @@
+"""Heterogeneous compatible transmission module (paper §III-B)."""
+from repro.core.compat import layout, parallel_align, precision  # noqa: F401
+from repro.core.compat.precision import WireFormat                # noqa: F401

@@ -1,0 +1,64 @@
+"""VRAM-management alignment component (paper §III-B-2, Fig. 3).
+
+Different vendors page their KV with different block sizes and tensor
+layouts. The paper's general method: convert to a one-dimensional tensor
+before transmission (erasing layout), then re-materialize in the target
+instance's layout after transmission.
+
+`extract_canonical` / `materialize` implement exactly that against the paged
+pools of `repro.serving.paged_cache`; `convert` is the pure
+layout×blocksize×dtype bridge used by tests and by the Pallas `kv_repack`
+kernel's oracle.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.paged_cache import (KVPageSpec, gather_sequence,
+                                       pages_from_canonical, scatter_sequence)
+
+
+def extract_canonical(spec: KVPageSpec, pool: jax.Array,
+                      block_ids: jax.Array, seq_len: int) -> jax.Array:
+    """P-side: pages → canonical 1-D wire tensor (the paper's flatten step).
+
+    Returns (seq_len * kv * hd,) flat array (layout fully erased)."""
+    kv = gather_sequence(spec, pool, block_ids, seq_len)
+    return kv.reshape(-1)
+
+
+def materialize(spec: KVPageSpec, pool: jax.Array, block_ids: jax.Array,
+                flat: jax.Array, seq_len: int) -> jax.Array:
+    """D-side: canonical 1-D wire tensor → pages in the D instance's layout."""
+    kv = flat.reshape(seq_len, spec.kv_heads, spec.head_dim)
+    return scatter_sequence(spec, pool, block_ids, kv)
+
+
+def convert(src: KVPageSpec, dst: KVPageSpec, src_pages: jax.Array,
+            seq_len: int) -> jax.Array:
+    """Pure conversion: src-layout pages of one sequence → dst-layout pages.
+
+    src_pages: (nb_src, *src.page_shape()). Returns (nb_dst, *dst.page_shape()).
+    Head geometry must match (same kv_heads × head_dim); block size and axis
+    layout may differ — this is the Fig. 3 conversion.
+    """
+    assert src.kv_heads == dst.kv_heads and src.head_dim == dst.head_dim, \
+        "head geometry mismatch is handled by parallel_align, not layout"
+    from repro.serving.paged_cache import pages_to_canonical
+    canon = pages_to_canonical(src, src_pages)              # (nb, bs, kv, hd)
+    flat = canon.reshape(-1, src.kv_heads, src.head_dim)[:seq_len]
+    nb_dst = dst.blocks_for(seq_len)
+    pad = nb_dst * dst.block_size - seq_len
+    flat = jnp.pad(flat.astype(dst.jdtype), ((0, pad), (0, 0), (0, 0)))
+    canon_dst = flat.reshape(nb_dst, dst.block_size, dst.kv_heads, dst.head_dim)
+    return pages_from_canonical(dst, canon_dst)
+
+
+def transfer_shapes(src: KVPageSpec, dst: KVPageSpec,
+                    seq_len: int) -> Tuple[int, int, int]:
+    """(flat_elements, src_blocks, dst_blocks) for planning/accounting."""
+    flat = seq_len * src.kv_heads * src.head_dim
+    return flat, src.blocks_for(seq_len), dst.blocks_for(seq_len)

@@ -1,0 +1,80 @@
+"""Heterogeneous parallel-strategy alignment component (paper §III-B-3, Fig. 4).
+
+P and D instances run different TP degrees. Each TP rank of P holds a KV
+shard of kv_heads/tp_p heads; D ranks need kv_heads/tp_d heads. The
+component computes, for every D rank, which P shards (or which slices of a
+P shard) to read:
+
+  tp_p > tp_d  → each D rank COMBINES tp_p/tp_d P shards   (Fig. 4 left)
+  tp_p < tp_d  → each P shard SPLITS into tp_d/tp_p slices (Fig. 4 right)
+
+MLA latent caches are replicated across TP ranks (attention runs in the
+shared latent space), so alignment degenerates to rank 0 → broadcast; the
+same holds for SSM/RG-LRU states sharded on heads — they realign with the
+identical head-axis arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Read plan for one D rank: list of (p_rank, head_lo, head_hi) slices
+    in P-shard-local head coordinates."""
+    d_rank: int
+    reads: Tuple[Tuple[int, int, int], ...]
+
+
+def plan_realign(kv_heads: int, tp_p: int, tp_d: int) -> List[ShardPlan]:
+    """Static read plan (control-plane): which P shard slices feed each D rank."""
+    assert kv_heads % tp_p == 0, (kv_heads, tp_p)
+    assert kv_heads % tp_d == 0, (kv_heads, tp_d)
+    per_p = kv_heads // tp_p
+    per_d = kv_heads // tp_d
+    plans = []
+    for d in range(tp_d):
+        lo, hi = d * per_d, (d + 1) * per_d      # global head range wanted
+        reads = []
+        for p in range(tp_p):
+            plo, phi = p * per_p, (p + 1) * per_p
+            s, e = max(lo, plo), min(hi, phi)
+            if s < e:
+                reads.append((p, s - plo, e - plo))
+        plans.append(ShardPlan(d_rank=d, reads=tuple(reads)))
+    return plans
+
+
+def realign_shards(shards_p: Sequence[jax.Array], tp_d: int) -> List[jax.Array]:
+    """Execute the plan on canonical shards.
+
+    shards_p: tp_p arrays of (S, kv_heads/tp_p, hd) → tp_d arrays of
+    (S, kv_heads/tp_d, hd). Combine = concat, split = slice (paper Fig. 4)."""
+    tp_p = len(shards_p)
+    kv_heads = sum(s.shape[1] for s in shards_p)
+    plans = plan_realign(kv_heads, tp_p, tp_d)
+    out = []
+    for plan in plans:
+        parts = [shards_p[p][:, lo:hi] for (p, lo, hi) in plan.reads]
+        out.append(parts[0] if len(parts) == 1 else jnp.concatenate(parts, 1))
+    return out
+
+
+def realign_replicated(shard_p0: jax.Array, tp_d: int) -> List[jax.Array]:
+    """MLA latent / replicated state: rank-0 read, broadcast to all D ranks."""
+    return [shard_p0 for _ in range(tp_d)]
+
+
+def transfer_pairs(kv_heads: int, tp_p: int, tp_d: int
+                   ) -> List[Tuple[int, int, int]]:
+    """(p_rank, d_rank, heads_moved) edges — drives the TransferEngine's
+    point-to-point schedule and the planner's cross-instance traffic model."""
+    edges = []
+    for plan in plan_realign(kv_heads, tp_p, tp_d):
+        for (p, lo, hi) in plan.reads:
+            edges.append((p, plan.d_rank, hi - lo))
+    return edges

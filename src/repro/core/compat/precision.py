@@ -1,0 +1,68 @@
+"""Precision alignment component (paper §III-B).
+
+P and D vendors may not share a native KV dtype. The paper's component is a
+dtype cast at the transfer boundary; beyond the paper we add an optional
+int8 wire format (per-head absmax scales) that halves transfer bytes for a
+bf16↔bf16 pair — flagged explicitly as `wire="int8"`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """On-the-wire representation of canonical KV (S, kv, hd)."""
+    kind: str = "raw"          # "raw" (cast) | "int8" (quantized, beyond-paper)
+    dtype: str = "bfloat16"    # wire dtype for kind == "raw"
+
+    def bytes_per_element(self) -> float:
+        if self.kind == "int8":
+            return 1.0 + 4.0 / 64  # scales amortized (one fp32 per 64 elems min)
+        return jnp.dtype(self.dtype).itemsize
+
+
+def encode_wire(kv_canon: jax.Array, wire: WireFormat
+                ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """canonical (S, kv, hd) → (payload, scales|None)."""
+    if wire.kind == "raw":
+        return kv_canon.astype(jnp.dtype(wire.dtype)), None
+    if wire.kind == "int8":
+        absmax = jnp.max(jnp.abs(kv_canon.astype(jnp.float32)), axis=-1,
+                         keepdims=True)                       # (S, kv, 1)
+        scale = jnp.maximum(absmax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(kv_canon.astype(jnp.float32) / scale),
+                     -127, 127).astype(jnp.int8)
+        return q, scale.astype(jnp.float32)
+    raise ValueError(f"unknown wire kind {wire.kind!r}")
+
+
+def decode_wire(payload: jax.Array, scales: Optional[jax.Array],
+                wire: WireFormat, target_dtype) -> jax.Array:
+    """(payload, scales) → canonical (S, kv, hd) in the D instance's dtype."""
+    if wire.kind == "raw":
+        return payload.astype(target_dtype)
+    if wire.kind == "int8":
+        return (payload.astype(jnp.float32) * scales).astype(target_dtype)
+    raise ValueError(f"unknown wire kind {wire.kind!r}")
+
+
+def wire_bytes(kv_canon_shape: Tuple[int, ...], wire: WireFormat) -> int:
+    n = 1
+    for d in kv_canon_shape:
+        n *= d
+    return int(n * wire.bytes_per_element())
+
+
+def cast_error_bound(src_dtype, wire: WireFormat) -> float:
+    """Worst-case relative error introduced at the boundary (used by tests
+    and by the planner's accuracy guardrail)."""
+    if wire.kind == "int8":
+        return 1.0 / 127.0
+    eps = {jnp.float32: 2 ** -24, jnp.bfloat16: 2 ** -8,
+           jnp.float16: 2 ** -11}
+    return float(eps.get(jnp.dtype(wire.dtype).type, 2 ** -8))

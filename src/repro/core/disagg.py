@@ -1,0 +1,204 @@
+"""P/D disaggregation orchestrator — the paper's §III system glue.
+
+``DisaggPipeline`` moves one finished prefill from a P instance to a D
+instance through the three alignment components:
+
+  1. precision  (``compat.precision``)  — wire dtype / int8 wire
+  2. VRAM mgmt  (``compat.layout``)     — flatten-to-1D, re-page re-layout
+  3. parallel   (``compat.parallel_align``) — TP merge/split of KV shards
+
+The same pipeline with P == D and a raw wire is the *integrated* baseline
+(prefill materializes into the local pools with no conversion), which is
+what the paper's Figs. 9–10 compare against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compat import parallel_align, precision
+from repro.core.compat.precision import WireFormat
+from repro.core.kv_transfer import TransferEngine
+from repro.serving import paged_cache as PC
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+
+
+def _chronological(k: np.ndarray, pos: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Ring-buffer shard (count, cap, kv, hd) + pos (count, cap) →
+    chronological (count, cap, kv, hd) and the absolute start position."""
+    order = np.argsort(pos[0])                    # same order across layers
+    return k[:, order], int(pos[0][order[0]])
+
+
+class DisaggPipeline:
+    def __init__(self, transfer: TransferEngine,
+                 wire: Optional[WireFormat] = None):
+        self.transfer = transfer
+        self.wire = wire or WireFormat(kind="raw", dtype="bfloat16")
+
+    # ------------------------------------------------------------------ #
+    # P side: package → wire
+    # ------------------------------------------------------------------ #
+    def encode_package(self, p_engine: Engine, package: Dict[str, Any]
+                       ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        tp_p = p_engine.vendor.tp
+        out_kv = []
+        for kind, gi, pi, entry in package["kv"]:
+            if kind == "mla":
+                # latent cache is TP-replicated — ship rank-0 copy only
+                ckv = np.asarray(entry["ckv"])       # (count, S, lora)
+                kpe = np.asarray(entry["kpe"])
+                pl_c, sc_c = precision.encode_wire(
+                    jnp.asarray(ckv)[..., None, :].reshape(-1, 1, ckv.shape[-1]),
+                    self.wire)
+                pl_p, sc_p = precision.encode_wire(
+                    jnp.asarray(kpe)[..., None, :].reshape(-1, 1, kpe.shape[-1]),
+                    self.wire)
+                out_kv.append({"kind": "mla", "gi": gi, "pi": pi,
+                               "count": ckv.shape[0], "seq": ckv.shape[1],
+                               "start": 0,
+                               "payloads": [pl_c, pl_p],
+                               "scales": [sc_c, sc_p]})
+                continue
+            k, v = np.asarray(entry["k"]), np.asarray(entry["v"])
+            start = 0
+            if "pos" in entry and k.shape[1] < np.max(entry["pos"]) + 1:
+                k, start = _chronological(k, np.asarray(entry["pos"]))
+                v, _ = _chronological(np.asarray(entry["v"]),
+                                      np.asarray(entry["pos"]))
+            count, s, kv_heads, hd = k.shape
+            # TP shard split (P's parallel strategy), per Fig. 4
+            shards_k = np.split(k, tp_p, axis=2)
+            shards_v = np.split(v, tp_p, axis=2)
+            payloads, scales = [], []
+            for sh in shards_k + shards_v:
+                pl, sc = precision.encode_wire(
+                    jnp.asarray(sh).reshape(-1, sh.shape[2], hd), self.wire)
+                payloads.append(pl)
+                scales.append(sc)
+            out_kv.append({"kind": "kv", "gi": gi, "pi": pi, "count": count,
+                           "seq": s, "start": start, "tp_p": tp_p,
+                           "payloads": payloads, "scales": scales})
+        wire_pkg = {"kv": out_kv, "states": package["states"],
+                    "cross": package["cross"]}
+        meta = {"first_token": package["first_token"],
+                "seq_len": package["seq_len"], "tp_p": tp_p,
+                "wire": self.wire}
+        return wire_pkg, meta
+
+    # ------------------------------------------------------------------ #
+    # D side: wire → pools
+    # ------------------------------------------------------------------ #
+    def materialize(self, d_engine: Engine, slot: int, block_ids: np.ndarray,
+                    payload: Dict[str, Any], meta: Dict[str, Any]) -> None:
+        cfg = d_engine.cfg
+        tp_d = d_engine.vendor.tp
+        wire: WireFormat = meta["wire"]
+        caches = [list(g) for g in d_engine.caches]
+        bids = jnp.asarray(block_ids, jnp.int32)
+
+        for entry in payload["kv"]:
+            gi, pi = entry["gi"], entry["pi"]
+            count, s, start = entry["count"], entry["seq"], entry["start"]
+            if entry["kind"] == "mla":
+                spec_c = d_engine.specs["ckv"]
+                spec_p = d_engine.specs["kpe"]
+                ckv = precision.decode_wire(entry["payloads"][0],
+                                            entry["scales"][0], wire,
+                                            spec_c.jdtype)
+                kpe = precision.decode_wire(entry["payloads"][1],
+                                            entry["scales"][1], wire,
+                                            spec_p.jdtype)
+                ckv = ckv.reshape(count, s, 1, spec_c.head_dim)
+                kpe = kpe.reshape(count, s, 1, spec_p.head_dim)
+                pools = caches[gi][pi]
+                caches[gi][pi] = dict(
+                    pools,
+                    ckv_pool=self._write_pages(spec_c, pools["ckv_pool"],
+                                               bids, ckv, start),
+                    kpe_pool=self._write_pages(spec_p, pools["kpe_pool"],
+                                               bids, kpe, start))
+                continue
+            spec = d_engine.specs["kv"]
+            tp_p = entry["tp_p"]
+            half = tp_p
+            dec = [precision.decode_wire(pl, sc, wire, spec.jdtype)
+                   for pl, sc in zip(entry["payloads"], entry["scales"])]
+            shards_k = [d.reshape(count, s, -1, spec.head_dim)
+                        for d in dec[:half]]
+            shards_v = [d.reshape(count, s, -1, spec.head_dim)
+                        for d in dec[half:]]
+            # parallel-strategy alignment (merge/split), then assemble the
+            # full head set for this (tp=1 runtime) D engine's pools.
+            k_d = jnp.concatenate(
+                parallel_align.realign_shards(
+                    [s_.reshape(count * s, -1, spec.head_dim) for s_ in shards_k],
+                    tp_d), axis=1).reshape(count, s, -1, spec.head_dim)
+            v_d = jnp.concatenate(
+                parallel_align.realign_shards(
+                    [s_.reshape(count * s, -1, spec.head_dim) for s_ in shards_v],
+                    tp_d), axis=1).reshape(count, s, -1, spec.head_dim)
+            pools = caches[gi][pi]
+            caches[gi][pi] = dict(
+                pools,
+                k_pool=self._write_pages(spec, pools["k_pool"], bids, k_d, start),
+                v_pool=self._write_pages(spec, pools["v_pool"], bids, v_d, start))
+
+        # recurrent / SSM states: place rows at the slot
+        for _, gi, pi, state in payload["states"]:
+            caches[gi][pi] = d_engine._place_fn(caches[gi][pi], state, slot)
+        # enc-dec cross attention memory
+        for gi, pi, cr in payload["cross"]:
+            c = dict(caches[gi][pi])
+            for name in ("cross_k", "cross_v", "mem_len"):
+                c[name] = c[name].at[:, slot].set(
+                    jnp.asarray(cr[name]).astype(c[name].dtype))
+            caches[gi][pi] = c
+
+        d_engine.caches = tuple(tuple(g) for g in caches)
+
+    @staticmethod
+    def _write_pages(spec: PC.KVPageSpec, pool: jax.Array, block_ids,
+                     canon: jax.Array, start: int) -> jax.Array:
+        """canon: (count, S, kv, hd) holding absolute positions
+        [start, start+S) → scatter into pages (vmapped over layer count)."""
+        bs = spec.block_size
+        lo_block = start // bs
+        front = start - lo_block * bs
+        if front:
+            canon = jnp.pad(canon, ((0, 0), (front, 0), (0, 0), (0, 0)))
+        s_tot = canon.shape[1]
+        nb = -(-s_tot // bs)
+        use = block_ids[lo_block:lo_block + nb]
+        return jax.vmap(lambda pl, cn: PC.scatter_sequence(spec, pl, use, cn)
+                        )(pool, canon)
+
+    # ------------------------------------------------------------------ #
+    # Full handoff
+    # ------------------------------------------------------------------ #
+    def handoff(self, req: Request, p_engine: Engine, d_engine: Engine
+                ) -> Dict[str, Any]:
+        """prefill-package → stage → read → materialize. Returns meta."""
+        package = p_engine.prefill(req)
+        wire_pkg, meta = self.encode_package(p_engine, package)
+        key = f"{req.req_id}@{p_engine.name}"
+        nbytes = self.transfer.stage(key, wire_pkg, meta)
+        payload, meta = self.transfer.read(key)
+        payload = jax.tree.map(
+            lambda x: jnp.asarray(x) if isinstance(x, np.ndarray) else x,
+            payload)
+
+        def materialize_fn(engine, slot, bids, _pkg):
+            self.materialize(engine, slot, bids, payload, meta)
+
+        d_engine.add_sequence(req, {"first_token": meta["first_token"],
+                                    "seq_len": meta["seq_len"]},
+                              materialize_fn)
+        self.transfer.complete(key)
+        meta["bytes"] = nbytes
+        return meta

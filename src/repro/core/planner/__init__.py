@@ -1,0 +1,7 @@
+"""Deployment planner: layered simulator + two-stage joint optimization."""
+from repro.core.planner.hardware import GPU_A, GPU_B, TPU_V5E, HardwareSpec  # noqa: F401
+from repro.core.planner.optimizer import (DeploymentPlan, optimize_decode,   # noqa: F401
+                                          optimize_prefill, plan_deployment)
+from repro.core.planner.simulator import (FrameworkModel, InstanceModel,     # noqa: F401
+                                          ParallelStrategy)
+from repro.core.planner.workload import Workload                             # noqa: F401

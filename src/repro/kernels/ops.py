@@ -1,0 +1,70 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled; elsewhere (this CPU container) they run in
+``interpret=True`` mode, which executes the kernel body op-by-op — the
+correctness path the test sweeps exercise. ``force_interpret`` pins the
+mode for tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import kv_repack as _kr
+from repro.kernels import paged_attention as _pa
+from repro.serving.paged_cache import KVPageSpec
+
+
+def _interpret(force: Optional[bool]) -> bool:
+    if force is not None:
+        return force
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "force_interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    force_interpret: Optional[bool] = None):
+    """Causal flash attention. q: (B,H,Sq,d); k,v: (B,KV,Skv,d)."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_interpret(force_interpret))
+
+
+@partial(jax.jit, static_argnames=("window", "force_interpret"))
+def paged_attention(q, k_pool, v_pool, block_table, seq_lens, *,
+                    window: int = 0,
+                    force_interpret: Optional[bool] = None):
+    """Decode attention over paged pools. q: (B,H,d); pools (N,bs,KV,d)."""
+    return _pa.paged_attention(q, k_pool, v_pool, block_table, seq_lens,
+                               window=window,
+                               interpret=_interpret(force_interpret))
+
+
+@partial(jax.jit, static_argnames=("spec", "force_interpret"))
+def gather_pages(spec: KVPageSpec, pool, block_ids, *,
+                 force_interpret: Optional[bool] = None):
+    return _kr.gather_pages(spec, pool, block_ids,
+                            interpret=_interpret(force_interpret))
+
+
+@partial(jax.jit, static_argnames=("spec", "force_interpret"))
+def scatter_pages(spec: KVPageSpec, pool, block_ids, canon, *,
+                  force_interpret: Optional[bool] = None):
+    return _kr.scatter_pages(spec, pool, block_ids, canon,
+                             interpret=_interpret(force_interpret))
+
+
+@partial(jax.jit, static_argnames=("src", "dst", "seq_len",
+                                   "force_interpret"))
+def repack(src: KVPageSpec, dst: KVPageSpec, src_pool, src_blocks,
+           dst_pool, dst_blocks, seq_len: int, *,
+           force_interpret: Optional[bool] = None):
+    """Vendor alignment: P pool → canonical 1-D → D pool (paper Fig. 3)."""
+    return _kr.repack(src, dst, src_pool, src_blocks, dst_pool, dst_blocks,
+                      seq_len, interpret=_interpret(force_interpret))

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the numerically-authoritative
+references the per-kernel shape/dtype sweeps assert against)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.paged_cache import (KVPageSpec, pages_from_canonical,
+                                       pages_to_canonical)
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: (B,H,Sq,d); k,v: (B,KV,Skv,d) → (B,H,Sq,d). Full-materialized."""
+    b, h, sq, d = q.shape
+    kv, skv = k.shape[1], k.shape[2]
+    grp = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kv, grp, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kj <= qi
+    if window > 0:
+        ok &= (qi - kj) < window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        block_table: jax.Array, seq_lens: jax.Array, *,
+                        scale: Optional[float] = None,
+                        window: int = 0) -> jax.Array:
+    """q: (B,H,d); pools canonical (N,bs,KV,d); → (B,H,d)."""
+    b, h, d = q.shape
+    n, bs, kv, _ = k_pool.shape
+    grp = h // kv
+    maxp = block_table.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    k = k_pool[block_table.reshape(-1)].reshape(b, maxp * bs, kv, d)
+    v = v_pool[block_table.reshape(-1)].reshape(b, maxp * bs, kv, d)
+    qg = q.reshape(b, kv, grp, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(maxp * bs)[None]
+    ok = pos < seq_lens[:, None]
+    if window > 0:
+        ok &= pos >= (seq_lens[:, None] - window)
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)
+
+
+def gather_pages_ref(spec: KVPageSpec, pool: jax.Array,
+                     block_ids: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or pool.dtype
+    return pages_to_canonical(spec, pool[block_ids]).astype(out_dtype)
+
+
+def scatter_pages_ref(spec: KVPageSpec, pool: jax.Array,
+                      block_ids: jax.Array, canon: jax.Array) -> jax.Array:
+    return pool.at[block_ids].set(
+        pages_from_canonical(spec, canon).astype(pool.dtype))
+
+
+def repack_ref(src: KVPageSpec, dst: KVPageSpec, src_pool: jax.Array,
+               src_blocks: jax.Array, dst_pool: jax.Array,
+               dst_blocks: jax.Array, seq_len: int) -> jax.Array:
+    canon = gather_pages_ref(src, src_pool, src_blocks, out_dtype=dst.jdtype)
+    flat = canon.reshape(-1, src.kv_heads, src.head_dim)[:seq_len]
+    nb_d = dst.blocks_for(seq_len)
+    pad = nb_d * dst.block_size - seq_len
+    flat = jnp.pad(flat, ((0, pad), (0, 0), (0, 0)))
+    canon_d = flat.reshape(nb_d, dst.block_size, dst.kv_heads, dst.head_dim)
+    return scatter_pages_ref(dst, dst_pool, dst_blocks[:nb_d], canon_d)

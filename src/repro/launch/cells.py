@@ -1,0 +1,112 @@
+"""The assigned (architecture × input-shape) grid — 40 cells.
+
+Shapes (per the assignment):
+  train_4k     seq 4,096   global_batch 256   lowers train_step
+  prefill_32k  seq 32,768  global_batch 32    lowers prefill_step
+  decode_32k   seq 32,768  global_batch 128   lowers serve_step (1 new token)
+  long_500k    seq 524,288 global_batch 1     lowers serve_step
+
+long_500k needs a sub-quadratic live context; it runs for the SSM / hybrid /
+SWA archs whose decode state is bounded (mamba2, recurrentgemma, mixtral)
+and is skipped for pure full-attention archs (see DESIGN.md §5).
+
+``cache_dtype`` override: qwen1.5-32b (kv=40, near-MHA) at decode_32k holds
+5.5 TB of bf16 KV — beyond a 4 TB v5e pod. Its cell serves with an fp8
+(e4m3) KV cache — the paper's *precision alignment* component applied as a
+capacity lever; every other cell uses bf16 KV.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+from repro.configs import ASSIGNED
+from repro.configs.base import get_config
+
+LONG_OK = {"mamba2-370m", "recurrentgemma-9b", "mixtral-8x7b"}
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, batch=256, mode="train"),
+    "prefill_32k": dict(seq_len=32768, batch=32, mode="prefill"),
+    "decode_32k": dict(seq_len=32768, batch=128, mode="decode"),
+    "long_500k": dict(seq_len=524288, batch=1, mode="decode"),
+}
+
+_CACHE_DTYPE_OVERRIDE = {("qwen1.5-32b", "decode_32k"): "float8_e4m3fn"}
+
+# activation budget for picking train microbatch count (bytes/chip of
+# residual-stream checkpoints under remat)
+_ACT_BUDGET = 1.2e9
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    mode: str                  # train | prefill | decode
+    seq_len: int
+    batch: int
+    n_micro: int = 1
+    cache_dtype: str = "bfloat16"
+    zero3: bool = False        # FSDP weight sharding (train, ≥8B params)
+    act_seq: bool = False      # sequence-parallel residual stream (train)
+    skip: Optional[str] = None
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}@{self.shape}"
+
+    def decode_capacity(self) -> int:
+        """Room for the live context + a margin of new tokens, padded to a
+        multiple of 16 so the capacity axis shards."""
+        cap = self.seq_len + 128
+        return -(-cap // 16) * 16
+
+
+def _n_micro(arch: str, batch: int, seq: int, dp: int = 16) -> int:
+    cfg = get_config(arch)
+    layers = cfg.num_layers + cfg.encoder_layers
+    n = 1
+    while n < batch // dp:
+        per_chip = (batch / (n * dp)) * seq * cfg.d_model * 2 * layers
+        if per_chip <= _ACT_BUDGET:
+            break
+        n *= 2
+    return n
+
+
+def make_cells(archs: Optional[List[str]] = None) -> List[Cell]:
+    out = []
+    for arch in (archs or ASSIGNED):
+        for shape, sd in SHAPES.items():
+            skip = None
+            if shape == "long_500k" and arch not in LONG_OK:
+                skip = "full-attention arch: 500k live KV is unservable " \
+                       "(see DESIGN.md §5)"
+            nm = _n_micro(arch, sd["batch"], sd["seq_len"]) \
+                if sd["mode"] == "train" else 1
+            # ZeRO-3 weight sharding: a bf16 replica of a 45B+ model does
+            # not leave room for grads on a 16 GiB chip.
+            z3 = (sd["mode"] == "train"
+                  and get_config(arch).param_count() > 8e9)
+            # mixtral train: the §Perf-validated deployment — fewer micros
+            # (ZeRO-3 weight gathers repeat per micro) paid for with
+            # sequence-parallel residuals (EXPERIMENTS.md §Perf cell B).
+            act_seq = False
+            if arch == "mixtral-8x7b" and sd["mode"] == "train":
+                nm, act_seq = 8, True
+            out.append(Cell(
+                arch=arch, shape=shape, mode=sd["mode"],
+                seq_len=sd["seq_len"], batch=sd["batch"], n_micro=nm,
+                cache_dtype=_CACHE_DTYPE_OVERRIDE.get((arch, shape),
+                                                      "bfloat16"),
+                zero3=z3, act_seq=act_seq, skip=skip))
+    return out
+
+
+def get_cell(arch: str, shape: str) -> Cell:
+    for c in make_cells([arch]):
+        if c.shape == shape:
+            return c
+    raise KeyError((arch, shape))

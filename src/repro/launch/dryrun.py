@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 --xla_disable_hlo_passes=while-loop-invariant-code-motion,while-loop-expensive-invariant-code-motion"
+# ^ These two lines MUST stay first — before ANY other import — since jax
+# locks the device count at first init, and the production meshes need 512
+# placeholder devices on this CPU-only container. Do NOT set this globally.
+#
+# The two disabled passes hoist loop-invariant f32 copies of bf16 weights
+# out of the layer scan. Those copies only exist because the CPU backend
+# emulates bf16 dots in f32 (float-normalization); the TPU MXU consumes
+# bf16 natively, so the hoisted buffers would misreport the target's
+# per-chip memory by +2× weight bytes. See DESIGN.md §Hardware adaptation.
+#
+# Multi-pod dry-run: lower + compile every (architecture × input shape ×
+# mesh) cell and record memory / cost / collective evidence.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch qwen3-4b --shape decode_32k
+#   python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+#   python -m repro.launch.dryrun --all --probes   # add roofline probes
+#
+# Per cell it emits a JSON record:
+#   {cell, mesh, ok, seconds, memory_analysis, flops, bytes, wire_bytes,
+#    roofline terms (from probes), skip reason if any}
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from repro.configs import ASSIGNED
+from repro.launch.cells import Cell, get_cell, make_cells
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_artifacts
+from repro.roofline import analysis as RA
+
+
+def _mem_fields(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    if out:
+        out["total_minus_aliased"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def run_cell(cell: Cell, mesh_kind: str, *, probes: bool = False,
+             verbose: bool = True) -> Dict[str, Any]:
+    rec: Dict[str, Any] = {
+        "arch": cell.arch, "shape": cell.shape, "mode": cell.mode,
+        "mesh": mesh_kind, "seq_len": cell.seq_len, "batch": cell.batch,
+        "n_micro": cell.n_micro, "cache_dtype": cell.cache_dtype,
+    }
+    if cell.skip:
+        rec["ok"] = None
+        rec["skip"] = cell.skip
+        if verbose:
+            print(f"[skip] {cell.name} ({mesh_kind}): {cell.skip}",
+                  flush=True)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        art = make_artifacts(cell, mesh)
+        lowered = art.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rec["ok"] = True
+        rec["seconds"] = {"lower": round(t_lower, 1),
+                          "compile": round(t_compile, 1)}
+        rec["memory_analysis"] = _mem_fields(compiled)
+        ca = compiled.cost_analysis() or {}
+        rec["scanned_cost"] = {"flops": float(ca.get("flops", 0.0)),
+                               "bytes": float(ca.get("bytes accessed", 0.0))}
+        if verbose:
+            mb = rec["memory_analysis"].get("total_minus_aliased", 0) / 2**30
+            print(f"[ok] {cell.name}:{cell.mode} ({mesh_kind}, {chips}ch) "
+                  f"lower {t_lower:.0f}s compile {t_compile:.0f}s "
+                  f"mem/chip {mb:.2f} GiB", flush=True)
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {str(e)[:400]}"
+        if verbose:
+            print(f"[FAIL] {cell.name}:{cell.mode} ({mesh_kind}): "
+                  f"{rec['error']}", flush=True)
+            traceback.print_exc(limit=3)
+        return rec
+
+    if probes and mesh_kind == "single":
+        try:
+            rec["roofline"] = run_probes(cell, mesh, verbose=verbose)
+        except Exception as e:
+            rec["roofline"] = {"error": f"{type(e).__name__}: {str(e)[:400]}"}
+            if verbose:
+                print(f"[probe-FAIL] {cell.name}: {rec['roofline']}",
+                      flush=True)
+    return rec
+
+
+def run_probes(cell: Cell, mesh, verbose: bool = True) -> Dict[str, Any]:
+    """Unrolled reduced-depth probe compiles → extrapolated roofline terms."""
+    plan = RA.probe_plan(cell.arch)
+    chips = mesh.devices.size
+    model_axis = mesh.shape.get("model", 1)
+    acc: List = []
+    for override, coeff in plan:
+        art = make_artifacts(cell, mesh, unroll=True,
+                             layer_override=override)
+        compiled = art.lower().compile()
+        terms = RA.analyze_compiled(compiled, model_axis)
+        acc.append((terms, coeff))
+    terms = RA.roofline_for_cell(acc)
+    secs = terms.seconds()
+    tokens = cell.batch * (cell.seq_len if cell.mode != "decode" else 1)
+    mf = RA.model_flops(cell.arch, cell.mode, tokens)
+    ratio = RA.useful_ratio(cell.arch, cell.mode, tokens,
+                            terms.flops * chips)
+    out = {
+        "flops_per_chip": terms.flops,
+        "hbm_bytes_per_chip": terms.hbm_bytes,
+        "hbm_bytes_corrected": terms.hbm_bytes_corrected,
+        "convert_bytes_per_chip": terms.convert_bytes,
+        "wire_bytes_per_chip": terms.wire_bytes,
+        "by_kind": terms.by_kind,
+        "seconds": secs,
+        "dominant": terms.dominant(),
+        "model_flops_global": mf,
+        "useful_ratio": ratio,
+        "probe_overrides": [o for o, _ in plan],
+    }
+    if verbose:
+        print(f"  roofline {cell.name}: compute {secs['compute']:.4f}s "
+              f"memory {secs['memory']:.4f}s collective "
+              f"{secs['collective']:.4f}s → {out['dominant']}-bound, "
+              f"useful {ratio:.2f}", flush=True)
+    return out
+
+
+def run_handoffs(arch: Optional[str], out: Optional[str]) -> None:
+    """Lower the P→D cache-realignment program (the paper's compatible
+    transmission module as HLO) and report its wire bytes per arch."""
+    from repro.launch.steps import make_handoff_artifacts
+    from repro.roofline import analysis as RA
+    mesh = make_production_mesh()
+    archs = ASSIGNED if arch in (None, "all") else [arch]
+    print("| arch | KV bytes (32-seq batch) | wire bytes/chip | "
+          "collective breakdown |")
+    for a in archs:
+        try:
+            art = make_handoff_artifacts(a, mesh)
+            compiled = art.lower().compile()
+            terms = RA.analyze_compiled(compiled, mesh.shape.get("model", 1))
+            kv_bytes = sum(
+                l.size * l.dtype.itemsize
+                for l in jax.tree.leaves(art.abstract_args[0]))
+            rec = {"arch": a, "kind": "handoff",
+                   "kv_bytes_global": int(kv_bytes),
+                   "wire_bytes_per_chip": terms.wire_bytes,
+                   "by_kind": terms.by_kind, "ok": True}
+            print(f"| {a} | {kv_bytes/2**30:.2f} GiB | "
+                  f"{terms.wire_bytes/2**20:.1f} MiB | "
+                  f"{ {k: round(v/2**20, 1) for k, v in terms.by_kind.items()} } |",
+                  flush=True)
+        except Exception as e:
+            rec = {"arch": a, "kind": "handoff", "ok": False,
+                   "error": f"{type(e).__name__}: {str(e)[:300]}"}
+            print(f"| {a} | FAILED {rec['error'][:120]} |", flush=True)
+        if out:
+            with open(out, "a") as fh:
+                fh.write(json.dumps(rec) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ASSIGNED + ["all"],
+                    help="architecture id (--all for every arch)")
+    ap.add_argument("--shape", default=None,
+                    choices=["train_4k", "prefill_32k", "decode_32k",
+                             "long_500k"])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) cell")
+    ap.add_argument("--probes", action="store_true",
+                    help="also run roofline probe compiles (single-pod)")
+    ap.add_argument("--handoff", action="store_true",
+                    help="lower the P→D KV-handoff program per arch")
+    ap.add_argument("--probes-only", action="store_true",
+                    help="re-run roofline probes only (no artifact "
+                         "compile; records merge into --out)")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    args = ap.parse_args()
+
+    if args.handoff:
+        run_handoffs(args.arch, args.out)
+        return
+
+    if args.all or args.arch in (None, "all"):
+        cells = make_cells()
+        if args.shape:
+            cells = [c for c in cells if c.shape == args.shape]
+    else:
+        cells = ([get_cell(args.arch, args.shape)] if args.shape
+                 else make_cells([args.arch]))
+
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    records = []
+    if args.probes_only:
+        mesh = make_production_mesh()
+        for cell in cells:
+            if cell.skip:
+                continue
+            try:
+                rec = {"arch": cell.arch, "shape": cell.shape,
+                       "mesh": "single", "mode": cell.mode, "ok": True,
+                       "roofline": run_probes(cell, mesh)}
+            except Exception as e:
+                rec = {"arch": cell.arch, "shape": cell.shape,
+                       "mesh": "single", "mode": cell.mode, "ok": True,
+                       "roofline": {"error": str(e)[:300]}}
+                print(f"[probe-FAIL] {cell.name}: {str(e)[:200]}",
+                      flush=True)
+            records.append(rec)
+            if args.out:
+                with open(args.out, "a") as fh:
+                    fh.write(json.dumps(rec) + "\n")
+        return
+
+    for cell in cells:
+        for mk in meshes:
+            rec = run_cell(cell, mk, probes=args.probes)
+            records.append(rec)
+            if args.out:
+                with open(args.out, "a") as fh:
+                    fh.write(json.dumps(rec) + "\n")
+
+    n_ok = sum(1 for r in records if r["ok"])
+    n_skip = sum(1 for r in records if r["ok"] is None)
+    n_fail = sum(1 for r in records if r["ok"] is False)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED "
+          f"of {len(records)}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Serving launcher: lower + AOT-compile the P (prefill) and D (decode)
+programs for an assigned architecture on the production mesh, then run a
+local functional demo of the disaggregated flow on a reduced config.
+
+On real hardware each pod runs this under its own jax.distributed
+initialization; on this container the compile path is the multi-pod
+dry-run (see dryrun.py) and ``--demo`` exercises the same code on a small
+model with real numerics.
+
+  python -m repro.launch.serve --arch qwen3-4b --shape decode_32k
+  python -m repro.launch.serve --demo
+"""
+import os
+if "XLA_FLAGS" not in os.environ:      # 512 fake chips unless launched real
+    os.environ["XLA_FLAGS"] = \
+        "--xla_force_host_platform_device_count=512 " \
+        "--xla_disable_hlo_passes=while-loop-invariant-code-motion," \
+        "while-loop-expensive-invariant-code-motion"
+
+import argparse
+
+
+def compile_programs(arch: str, shape: str, multi_pod: bool) -> None:
+    from repro.launch.cells import get_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (make_prefill_artifacts,
+                                    make_serve_artifacts)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = get_cell(arch, shape)
+    if cell.skip:
+        print(f"[skip] {cell.name}: {cell.skip}")
+        return
+    arts = []
+    if cell.mode in ("prefill", "decode"):
+        arts.append(make_prefill_artifacts(
+            get_cell(arch, "prefill_32k"), mesh))
+        arts.append(make_serve_artifacts(
+            get_cell(arch, "decode_32k"), mesh))
+    for art in arts:
+        compiled = art.lower().compile()
+        ma = compiled.memory_analysis()
+        tot = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+               + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        print(f"[ok] {art.name}: compiled for {mesh.devices.size} chips, "
+              f"{tot/2**30:.2f} GiB/chip")
+
+
+def demo() -> None:
+    import subprocess
+    import sys
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "..")
+    subprocess.run([sys.executable,
+                    os.path.join(root, "examples", "serve_disagg.py"),
+                    "--requests", "8", "--max-new", "8"], check=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--demo", action="store_true")
+    args = ap.parse_args()
+    if args.demo:
+        demo()
+    else:
+        compile_programs(args.arch, args.shape, args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,270 @@
+"""Sharding rules: params / caches / batches / optimizer state → PartitionSpec.
+
+Scheme (Megatron-style TP on the "model" axis, DP over ("pod","data")):
+
+  * attention: q/o weights sharded on the *head* axis; k/v weights on
+    head_dim (kv-head counts of 8/10/20/40 never divide a 16-way axis).
+    Head counts that do not divide the model axis are PADDED at deploy time
+    (``pad_heads``) for train/prefill programs — the same data-alignment
+    padding the planner's ``align_ops`` models; decode runs unpadded.
+  * MLP: column (d_ff) then row (d_ff) — classic col/row pair.
+  * MoE: expert-TP (d_ff_expert sharded), matching the shard_map MoE's
+    in_specs; EP over the model axis is a hillclimb variant.
+  * embeddings/LM head: vocab-sharded (padded to the axis via ``pad_vocab``).
+  * decode KV caches: sharded on the *capacity* (sequence) axis — the
+    flash-decoding layout: per-chip partial attention + tiny stat psums.
+    Prefill emits hd-sharded caches; the P→D handoff reshards (the paper's
+    parallel-strategy alignment, at pod scale).
+  * ZeRO-1: optimizer moments additionally sharded over "data" on the first
+    free divisible dim.
+
+Every rule falls back towards replication when a dim is not divisible by
+the axis size — jit rejects uneven input shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Params = Any
+
+
+# --------------------------------------------------------------------------- #
+# Deploy-time config transforms (data alignment)
+# --------------------------------------------------------------------------- #
+def pad_heads(cfg: ModelConfig, axis: int) -> ModelConfig:
+    """Pad num_heads up to a multiple of the model axis, then num_kv_heads
+    up to the nearest divisor of the padded head count (grp stays integral).
+    Identity when already aligned."""
+    h = cfg.num_heads
+    if h <= 0 or cfg.attention_kind == "none":
+        return cfg
+    h2 = math.ceil(h / axis) * axis if h % axis else h
+    kv = max(cfg.num_kv_heads, 1)
+    kv2 = kv
+    while h2 % kv2:
+        kv2 += 1
+    if (h2, kv2) == (h, kv):
+        return cfg
+    # keep hd explicit so padding heads does not change per-head dim
+    return cfg.with_(num_heads=h2, num_kv_heads=kv2, head_dim=cfg.hd)
+
+
+def pad_vocab(cfg: ModelConfig, axis: int) -> ModelConfig:
+    v = cfg.vocab_size
+    v2 = math.ceil(v / axis) * axis
+    return cfg if v2 == v else cfg.with_(vocab_size=v2)
+
+
+def deploy_config(cfg: ModelConfig, axis: int, mode: str) -> ModelConfig:
+    """The deployment model for a given program kind.
+
+    train/prefill shard attention scores on heads → need head padding;
+    decode shards scores on the cache capacity axis → unpadded."""
+    cfg = pad_vocab(cfg, axis)
+    if mode in ("train", "prefill"):
+        cfg = pad_heads(cfg, axis)
+    return cfg
+
+
+# --------------------------------------------------------------------------- #
+# Param rules
+# --------------------------------------------------------------------------- #
+def _div(n: int, size: int) -> bool:
+    return n >= size and n % size == 0
+
+
+def _pick(shape: Tuple[int, ...], prefs: Tuple[int, ...], size: int
+          ) -> Optional[int]:
+    for d in prefs:
+        if d < len(shape) and _div(shape[d], size):
+            return d
+    return None
+
+
+_LEAF_PREFS = {
+    # name: preference order of dims (unstacked leaf coordinates)
+    "embed": (0, 1),          # (V, d)
+    "lm_head": (1, 0),        # (d, V)
+    "wq": (1, 2),             # (d, h, hd)
+    "wk": (2,),               # (d, kv, hd) → hd only (kv never divides)
+    "wv": (2,),
+    "wo": (0, 1),             # (h, hd, d)
+    "bq": (0, 1),             # (h, hd)
+    "bk": (1,),               # (kv, hd)
+    "bv": (1,),
+    "w_ukv": (1,),            # (lora, h, ·)
+    "w_gate": (1,),           # (d, f) | moe (E, d, fe) handled by ndim
+    "w_up": (1,),
+    "w_down": (0,),           # (f, d) | moe (E, fe, d)
+    "w_x": (1,),              # rglru (d, w)
+    "conv_w": (1,),           # rglru (K, w)
+    "conv_b": (0,),
+    "lru_in_w": (1,),         # (w, w)
+    "lru_a_w": (1,),
+    "lru_in_b": (0,),
+    "lru_a_b": (0,),
+    "lam": (0,),
+    "w_out": (0,),            # rglru (w, d)
+}
+
+_MOE_PREFS = {"w_gate": (2,), "w_up": (2,), "w_down": (1,)}     # (E,d,fe)
+_REPLICATED = {"router", "w_dkv", "kv_norm", "q_norm", "k_norm",
+               "norm", "norm1", "norm2", "norm_x", "final_norm", "enc_norm"}
+
+
+def _key_name(k) -> Optional[str]:
+    if isinstance(k, jax.tree_util.DictKey):
+        return k.key
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return k.name
+    return None
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        n = _key_name(k)
+        if n is not None:
+            return n
+    return ""
+
+
+def _in_subtree(path, name: str) -> bool:
+    return any(_key_name(k) == name for k in path)
+
+
+def param_pspec(path, leaf, cfg: ModelConfig, axis_name: str,
+                axis_size: int) -> P:
+    """PartitionSpec for one param leaf (stacked group params have a
+    leading ``count`` dim, detected via the 'groups' path)."""
+    name = _leaf_name(path)
+    shape = tuple(leaf.shape)
+    stacked = _in_subtree(path, "groups") or _in_subtree(path, "enc_groups")
+    off = 1 if stacked else 0
+    base = shape[off:]
+    if _in_subtree(path, "ssd"):
+        return P()                     # SSD params replicated (see DESIGN)
+    if name in _REPLICATED or len(base) <= 1 and name not in _LEAF_PREFS:
+        return P()
+    prefs = _LEAF_PREFS.get(name)
+    moe = _in_subtree(path, "mlp") and len(base) == 3 \
+        and name in ("w_gate", "w_up", "w_down") \
+        and not _in_subtree(path, "shared")
+    if moe:
+        prefs = _MOE_PREFS[name]
+    if prefs is None:
+        return P()
+    dim = _pick(base, prefs, axis_size)
+    if dim is None:
+        return P()
+    spec = [None] * len(shape)
+    spec[dim + off] = axis_name
+    return P(*spec)
+
+
+def param_pspecs(abstract_params: Params, cfg: ModelConfig,
+                 axis_name: str = "model", axis_size: int = 16) -> Params:
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: param_pspec(kp, leaf, cfg, axis_name, axis_size),
+        abstract_params)
+
+
+# --------------------------------------------------------------------------- #
+# ZeRO-1 optimizer-state rules
+# --------------------------------------------------------------------------- #
+def zero1_pspec(pspec: P, shape: Tuple[int, ...], data_axes: Tuple[str, ...],
+                data_size: int) -> P:
+    """Add the data axes on the first unsharded divisible dim (idempotent —
+    a spec that already uses a data axis is returned unchanged)."""
+    spec = list(pspec) + [None] * (len(shape) - len(pspec))
+    used = {a for s in spec if s is not None
+            for a in (s if isinstance(s, tuple) else (s,))}
+    if used & set(data_axes):
+        return P(*spec)
+    for d, s in enumerate(shape):
+        if spec[d] is None and _div(s, data_size):
+            spec[d] = data_axes if len(data_axes) > 1 else data_axes[0]
+            break
+    return P(*spec)
+
+
+def opt_pspecs(abstract_opt: Any, pspecs: Params,
+               data_axes: Tuple[str, ...], data_size: int) -> Any:
+    def one(moments):
+        return jax.tree.map(
+            lambda sd, sp: zero1_pspec(sp, sd.shape, data_axes, data_size),
+            moments, pspecs)
+    return {"mu": one(abstract_opt["mu"]), "nu": one(abstract_opt["nu"]),
+            "step": P()}
+
+
+# --------------------------------------------------------------------------- #
+# Cache + batch rules
+# --------------------------------------------------------------------------- #
+def _dp(batch: int, data_axes: Tuple[str, ...], data_size: int):
+    if not data_axes or not _div(batch, data_size):
+        return None
+    return data_axes if len(data_axes) > 1 else data_axes[0]
+
+
+def cache_pspecs(abstract_caches: Any, cfg: ModelConfig, batch: int,
+                 data_axes: Tuple[str, ...], data_size: int,
+                 axis_name: str = "model", axis_size: int = 16,
+                 mode: str = "decode") -> Any:
+    """Decode caches: capacity(seq)-sharded on the model axis.
+    Prefill-emitted caches: hd-sharded (matches how K/V are computed).
+    States (SSM/RG-LRU): batch-sharded only. Leaves are stacked (count,…)."""
+    dp = _dp(batch, data_axes, data_size)
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)           # (count, B, ...)
+        name = _leaf_name(path)
+        spec: list = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] == batch:
+            spec[1] = dp
+        # KVCache fields k/v: (count,B,cap,kv,hd); pos: (count,B,cap)
+        if name in ("k", "v"):
+            if mode == "decode" and _div(shape[2], axis_size):
+                spec[2] = axis_name
+            elif mode == "prefill" and _div(shape[4], axis_size):
+                spec[4] = axis_name
+        elif name == "pos" and len(shape) == 3:
+            if mode == "decode" and _div(shape[2], axis_size):
+                spec[2] = axis_name
+        # MLA: ckv (count,B,cap,lora), kpe (count,B,cap,rope)
+        elif name in ("ckv", "kpe"):
+            if mode == "decode" and _div(shape[2], axis_size):
+                spec[2] = axis_name
+        elif name in ("cross_k", "cross_v"):
+            if _div(shape[4], axis_size):
+                spec[4] = axis_name
+        # rglru h: (count,B,w); conv: (count,B,K-1,w)
+        elif name == "h" and len(shape) == 3 and _div(shape[2], axis_size):
+            spec[2] = axis_name
+        elif name == "conv" and len(shape) == 4 and _div(shape[3], axis_size):
+            spec[3] = axis_name
+        # SSM h (count,B,H,P,N) / conv: batch-sharded only
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_caches)
+
+
+def batch_pspecs(abstract_batch: Any, data_axes: Tuple[str, ...],
+                 data_size: int) -> Any:
+    def rule(_path, leaf):
+        dp = _dp(leaf.shape[0], data_axes, data_size)
+        return P(dp, *([None] * (len(leaf.shape) - 1)))
+    return jax.tree_util.tree_map_with_path(rule, abstract_batch)
+
+
+def to_shardings(mesh, pspecs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

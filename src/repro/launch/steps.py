@@ -1,0 +1,313 @@
+"""Step builders: (cell, mesh) → AOT-lowerable jitted programs.
+
+Three program kinds, matching the paper's instance roles:
+  train_step    — loss/grad/AdamW (ZeRO-1, microbatched, remat)
+  prefill_step  — P instance: prompt → (first-token logits, KV caches)
+  serve_step    — D instance: one decode token against seq_len-deep caches
+
+Each builder returns a ``StepArtifacts`` with the jitted fn, abstract args,
+and the sharding trees, so dryrun / roofline / launchers share one source
+of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, get_config
+from repro.launch import sharding as SH
+from repro.launch.cells import Cell
+from repro.launch.mesh import data_axes, model_axis
+from repro.models import dist
+from repro.models import model as M
+from repro.training.optim import AdamWConfig
+from repro.training.train_step import (TrainState, abstract_train_state,
+                                       make_train_step)
+
+
+@dataclasses.dataclass
+class StepArtifacts:
+    name: str
+    cfg: ModelConfig                 # deployed (padded) config
+    fn: Any                          # jitted, AOT-lowerable
+    abstract_args: Tuple[Any, ...]   # ShapeDtypeStruct pytrees
+    in_shardings: Any
+    out_shardings: Any
+
+    def lower(self):
+        return self.fn.lower(*self.abstract_args)
+
+
+def _axis_sizes(mesh) -> Tuple[Tuple[str, ...], int, str, int]:
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    m = model_axis(mesh)
+    return dp, dp_size, m, (mesh.shape[m] if m else 1)
+
+
+def _dctx(mesh, dp, m, *, mode: str, unroll: bool,
+          chunk_size: int = 1024, act_seq: bool = False,
+          attn_p_bf16: bool = False) -> dist.DistContext:
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return dist.DistContext(
+        mesh=mesh, dp_axes=dp, model_axis=m,
+        chunk_kv=8192 if mode in ("train", "prefill") else 0,
+        chunk_size=chunk_size,
+        moe_shard_map=True,
+        attn_p_bf16=attn_p_bf16,
+        unroll=unroll,
+        # act_seq: Megatron-style sequence parallelism on the residual
+        # stream (hillclimb variant — cuts boundary-activation memory 16×
+        # for per-layer all-gathers at attention/MLP entry)
+        act_spec=P(dp_spec, m if act_seq else None, None))
+
+
+def _input_structs(cfg: ModelConfig, cell: Cell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = cell.batch, cell.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cell.mode == "decode":
+        return {"tokens": sds((b, 1), jnp.int32),
+                "positions": sds((b, 1), jnp.int32)}
+    toks = s
+    out: Dict[str, Any] = {}
+    if cfg.frontend.kind == "vision":
+        npatch = cfg.frontend.num_patches
+        toks = s - npatch
+        out["patches"] = sds((b, npatch, cfg.d_model), jnp.bfloat16)
+    if cfg.is_enc_dec:
+        out["frames"] = sds((b, cfg.max_source_len, cfg.d_model),
+                            jnp.bfloat16)
+    out["tokens"] = sds((b, toks), jnp.int32)
+    if cell.mode == "train":
+        out["labels"] = sds((b, toks), jnp.int32)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+def make_train_artifacts(cell: Cell, mesh, *, unroll: bool = False,
+                         layer_override: Optional[Dict[str, int]] = None,
+                         chunk_size: int = 1024, act_seq: bool = False
+                         ) -> StepArtifacts:
+    dp, dp_size, m, m_size = _axis_sizes(mesh)
+    cfg = SH.deploy_config(get_config(cell.arch), m_size, "train")
+    if layer_override:
+        cfg = cfg.with_(**layer_override)
+    dctx = _dctx(mesh, dp, m, mode="train", unroll=unroll,
+                 chunk_size=chunk_size,
+                 act_seq=act_seq or getattr(cell, "act_seq", False))
+
+    state_abs = abstract_train_state(cfg)
+    pspecs = SH.param_pspecs(state_abs.params, cfg, m, m_size)
+    if cell.zero3:
+        # FSDP: shard weights over the data axes too; the per-layer
+        # all-gather is inserted by GSPMD inside the scan body.
+        pspecs = jax.tree.map(
+            lambda sd, sp: SH.zero1_pspec(sp, sd.shape, dp, dp_size),
+            state_abs.params, pspecs)
+    ospecs = SH.opt_pspecs(state_abs.opt, pspecs, dp, dp_size)
+    batch_abs = _input_structs(cfg, cell)
+    bspecs = SH.batch_pspecs(batch_abs, dp, dp_size)
+
+    state_sh = TrainState(params=SH.to_shardings(mesh, pspecs),
+                          opt=SH.to_shardings(mesh, ospecs))
+    batch_sh = SH.to_shardings(mesh, bspecs)
+    metrics_sh = {k: NamedSharding(mesh, P())
+                  for k in ("loss", "grad_norm", "lr")}
+
+    accum_sh = None
+    if cell.n_micro > 1:
+        accum_specs = jax.tree.map(
+            lambda sd, sp: SH.zero1_pspec(sp, sd.shape, dp, dp_size),
+            state_abs.params, pspecs)
+        accum_sh = SH.to_shardings(mesh, accum_specs)
+    step = make_train_step(cfg, AdamWConfig(), remat=True,
+                           n_micro=cell.n_micro, accum_shardings=accum_sh)
+
+    def wrapped(state, batch):
+        with dist.use(dctx):
+            return step(state, batch)
+
+    fn = jax.jit(wrapped, in_shardings=(state_sh, batch_sh),
+                 out_shardings=(state_sh, metrics_sh), donate_argnums=(0,))
+    return StepArtifacts(name=f"{cell.name}:train", cfg=cfg, fn=fn,
+                         abstract_args=(state_abs, batch_abs),
+                         in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, metrics_sh))
+
+
+# --------------------------------------------------------------------------- #
+def make_prefill_artifacts(cell: Cell, mesh, *, unroll: bool = False,
+                           layer_override: Optional[Dict[str, int]] = None,
+                           chunk_size: int = 1024, act_seq: bool = False,
+                           attn_p_bf16: bool = False) -> StepArtifacts:
+    dp, dp_size, m, m_size = _axis_sizes(mesh)
+    cfg = SH.deploy_config(get_config(cell.arch), m_size, "prefill")
+    if layer_override:
+        cfg = cfg.with_(**layer_override)
+    dctx = _dctx(mesh, dp, m, mode="prefill", unroll=unroll,
+                 chunk_size=chunk_size, act_seq=act_seq,
+                 attn_p_bf16=attn_p_bf16)
+    b, s = cell.batch, cell.seq_len
+    mem_len = cfg.max_source_len if cfg.is_enc_dec else 0
+
+    params_abs = M.abstract_params(cfg)
+    pspecs = SH.param_pspecs(params_abs, cfg, m, m_size)
+    inputs_abs = _input_structs(cfg, cell)
+    ispecs = SH.batch_pspecs(inputs_abs, dp, dp_size)
+    caches_abs = M.abstract_caches(cfg, b, s, jnp.dtype(cell.cache_dtype),
+                                   mem_len=mem_len)
+    cspecs = SH.cache_pspecs(caches_abs, cfg, b, dp, dp_size, m, m_size,
+                             mode="prefill")
+
+    params_sh = SH.to_shardings(mesh, pspecs)
+    inputs_sh = SH.to_shardings(mesh, ispecs)
+    caches_sh = SH.to_shardings(mesh, cspecs)
+    logits_sh = NamedSharding(mesh, P(SH._dp(b, dp, dp_size), m))
+
+    def prefill_step(params, inputs):
+        with dist.use(dctx):
+            caches = M.init_caches(cfg, b, s, jnp.dtype(cell.cache_dtype),
+                                   mem_len=mem_len)
+            last, caches = M.prefill(params, cfg, inputs, caches)
+            return last, caches
+
+    fn = jax.jit(prefill_step, in_shardings=(params_sh, inputs_sh),
+                 out_shardings=(logits_sh, caches_sh))
+    return StepArtifacts(name=f"{cell.name}:prefill", cfg=cfg, fn=fn,
+                         abstract_args=(params_abs, inputs_abs),
+                         in_shardings=(params_sh, inputs_sh),
+                         out_shardings=(logits_sh, caches_sh))
+
+
+# --------------------------------------------------------------------------- #
+def make_serve_artifacts(cell: Cell, mesh, *, unroll: bool = False,
+                         layer_override: Optional[Dict[str, int]] = None,
+                         chunk_size: int = 1024, act_seq: bool = False
+                         ) -> StepArtifacts:
+    """One-token decode against a KV cache holding cell.seq_len context."""
+    dp, dp_size, m, m_size = _axis_sizes(mesh)
+    cfg = SH.deploy_config(get_config(cell.arch), m_size, "decode")
+    if layer_override:
+        cfg = cfg.with_(**layer_override)
+    dctx = _dctx(mesh, dp, m, mode="decode", unroll=unroll,
+                 chunk_size=chunk_size)
+    b = cell.batch
+    cap = cell.decode_capacity()
+    mem_len = cfg.max_source_len if cfg.is_enc_dec else 0
+
+    params_abs = M.abstract_params(cfg)
+    pspecs = SH.param_pspecs(params_abs, cfg, m, m_size)
+    caches_abs = M.abstract_caches(cfg, b, cap, jnp.dtype(cell.cache_dtype),
+                                   mem_len=mem_len)
+    cspecs = SH.cache_pspecs(caches_abs, cfg, b, dp, dp_size, m, m_size,
+                             mode="decode")
+    tok_abs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+               "positions": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    tspecs = SH.batch_pspecs(tok_abs, dp, dp_size)
+
+    params_sh = SH.to_shardings(mesh, pspecs)
+    caches_sh = SH.to_shardings(mesh, cspecs)
+    tok_sh = SH.to_shardings(mesh, tspecs)
+    logits_sh = NamedSharding(mesh, P(SH._dp(b, dp, dp_size), None, m))
+
+    def serve_step(params, caches, io):
+        with dist.use(dctx):
+            logits, caches = M.decode_step(params, cfg, io["tokens"],
+                                           io["positions"], caches)
+            return logits, caches
+
+    fn = jax.jit(serve_step, in_shardings=(params_sh, caches_sh, tok_sh),
+                 out_shardings=(logits_sh, caches_sh), donate_argnums=(1,))
+    return StepArtifacts(name=f"{cell.name}:decode", cfg=cfg, fn=fn,
+                         abstract_args=(params_abs, caches_abs, tok_abs),
+                         in_shardings=(params_sh, caches_sh, tok_sh),
+                         out_shardings=(logits_sh, caches_sh))
+
+
+# --------------------------------------------------------------------------- #
+def make_handoff_artifacts(arch: str, mesh, *,
+                           layer_override: Optional[Dict[str, int]] = None
+                           ) -> StepArtifacts:
+    """The P→D KV handoff as ONE lowered program — the paper's
+    heterogeneous-compatible transmission module at pod scale:
+
+      * parallel-strategy alignment: prefill emits hd-sharded caches, the
+        decode instance wants capacity-sharded ones → the reshard lowers
+        to the all-to-all a real transfer engine would schedule;
+      * data alignment: the prefill deployment pads kv heads for TP — the
+        pad heads are sliced off;
+      * VRAM-management alignment: the decode capacity (seq+margin) is
+        padded onto the sequence axis;
+      * precision alignment: cast to the decode cell's KV dtype (fp8 for
+        qwen1.5-32b).
+
+    Runs at the prefill batch (one P instance's output)."""
+    from repro.launch.cells import get_cell
+    import jax.numpy as jnp
+
+    dp, dp_size, m, m_size = _axis_sizes(mesh)
+    cell_p = get_cell(arch, "prefill_32k")
+    cell_d = get_cell(arch, "decode_32k")
+    cfg_p = SH.deploy_config(get_config(arch), m_size, "prefill")
+    cfg_d = SH.deploy_config(get_config(arch), m_size, "decode")
+    if layer_override:
+        cfg_p = cfg_p.with_(**layer_override)
+        cfg_d = cfg_d.with_(**layer_override)
+    b = cell_p.batch
+    s, cap = cell_p.seq_len, cell_d.decode_capacity()
+    mem_len = cfg_p.max_source_len if cfg_p.is_enc_dec else 0
+    kv_d = max(cfg_d.num_kv_heads, 1)
+    d_dtype = jnp.dtype(cell_d.cache_dtype)
+
+    caches_p = M.abstract_caches(cfg_p, b, s, jnp.dtype(cell_p.cache_dtype),
+                                 mem_len=mem_len)
+    caches_d = M.abstract_caches(cfg_d, b, cap, d_dtype, mem_len=mem_len)
+    specs_p = SH.cache_pspecs(caches_p, cfg_p, b, dp, dp_size, m, m_size,
+                              mode="prefill")
+    specs_d = SH.cache_pspecs(caches_d, cfg_d, b, dp, dp_size, m, m_size,
+                              mode="decode")
+
+    def realign(path, src, dst_abs):
+        name = SH._leaf_name(path)
+        x = src
+        if name in ("k", "v", "cross_k", "cross_v") \
+                and x.shape[3] != dst_abs.shape[3]:
+            x = x[:, :, :, :kv_d]                  # drop TP pad heads
+        if name in ("k", "v", "pos", "ckv", "kpe") \
+                and x.shape[2] != dst_abs.shape[2]:
+            pad = dst_abs.shape[2] - x.shape[2]    # decode margin
+            widths = [(0, 0)] * x.ndim
+            widths[2] = (0, pad)
+            x = jnp.pad(x, widths,
+                        constant_values=(-1 if name == "pos" else 0))
+        return x.astype(dst_abs.dtype)
+
+    def handoff(caches):
+        flat_p = jax.tree_util.tree_flatten_with_path(caches)[0]
+        flat_d, treedef = jax.tree_util.tree_flatten(caches_d)
+        out = [realign(kp, leaf, dabs)
+               for (kp, leaf), dabs in zip(flat_p, flat_d)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    fn = jax.jit(handoff,
+                 in_shardings=(SH.to_shardings(mesh, specs_p),),
+                 out_shardings=SH.to_shardings(mesh, specs_d),
+                 donate_argnums=(0,))
+    return StepArtifacts(name=f"{arch}@handoff", cfg=cfg_d, fn=fn,
+                         abstract_args=(caches_p,),
+                         in_shardings=(specs_p,), out_shardings=specs_d)
+
+
+def make_artifacts(cell: Cell, mesh, **kw) -> StepArtifacts:
+    if cell.mode == "train":
+        return make_train_artifacts(cell, mesh, **kw)
+    if cell.mode == "prefill":
+        return make_prefill_artifacts(cell, mesh, **kw)
+    return make_serve_artifacts(cell, mesh, **kw)

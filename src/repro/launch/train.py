@@ -1,0 +1,45 @@
+"""Training launcher: lower + AOT-compile the train_step for an assigned
+architecture on the production mesh (ZeRO-1/3, microbatched, remat).
+For a runnable local training loop see examples/train_tiny.py.
+
+  python -m repro.launch.train --arch qwen3-4b [--multi-pod]
+"""
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = \
+        "--xla_force_host_platform_device_count=512 " \
+        "--xla_disable_hlo_passes=while-loop-invariant-code-motion," \
+        "while-loop-expensive-invariant-code-motion"
+
+import argparse
+import time
+
+
+def compile_at_scale(arch: str, multi_pod: bool) -> None:
+    from repro.launch.cells import get_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import make_train_artifacts
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = get_cell(arch, "train_4k")
+    art = make_train_artifacts(cell, mesh)
+    compiled = art.lower().compile()
+    ma = compiled.memory_analysis()
+    tot = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+           + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    print(f"[ok] {art.name}: compiled for {mesh.devices.size} chips "
+          f"(zero3={cell.zero3}, n_micro={cell.n_micro}), "
+          f"{tot/2**30:.2f} GiB/chip")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    t0 = time.time()
+    compile_at_scale(args.arch, args.multi_pod)
+    print(f"done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

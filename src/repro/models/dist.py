@@ -1,0 +1,58 @@
+"""Distribution context — launch-layer knobs consulted by the model code.
+
+The tiny-model CPU path (serving engines, unit tests) runs with the default
+context (everything off). The launch layer installs a context to switch on:
+
+  * chunk_kv      — chunked (online-softmax) attention above this seq len;
+                    bounds the score buffer for 32k/500k prefill.
+  * vocab_parallel— one-hot matmul embedding + vocab-parallel loss
+                    (gather/take_along_axis lower to all-gathers of the
+                    sharded table/logits; the one-hot einsum stays sharded).
+  * moe_shard_map — local-routing expert-TP MoE under shard_map (the global
+                    sort/ragged_dot path would all-gather every token).
+  * unroll        — unroll the layer scan (roofline probe compiles only;
+                    XLA cost analysis counts a while body exactly once, so
+                    FLOPs of scanned programs are undercounted by the trip
+                    count).
+  * act_spec/seq_spec — with_sharding_constraint anchors for the residual
+                    stream (None = let GSPMD propagate).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Any = None
+    dp_axes: Tuple[str, ...] = ()
+    model_axis: Optional[str] = None
+    chunk_kv: int = 0            # 0 = never chunk
+    chunk_size: int = 1024
+    vocab_parallel: bool = False
+    moe_shard_map: bool = False
+    moe_capacity_factor: float = 1.25
+    attn_p_bf16: bool = False    # bf16 probabilities into the PV matmul
+    unroll: bool = False
+    act_spec: Any = None         # PartitionSpec for (B, S, d) residuals
+
+
+_DEFAULT = DistContext()
+_CURRENT = _DEFAULT
+
+
+def ctx() -> DistContext:
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def use(context: DistContext):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = context
+    try:
+        yield context
+    finally:
+        _CURRENT = prev

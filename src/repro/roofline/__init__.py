@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (HW, RooflineTerms, analyze_compiled,
+                                     collective_bytes, probe_plan,
+                                     roofline_for_cell)

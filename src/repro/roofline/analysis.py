@@ -1,0 +1,259 @@
+"""Three-term roofline from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = wire_bytes_per_chip / link_bw
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. cost_analysis() runs on the per-chip SPMD module, so its numbers are
+already per-chip.
+
+XLA's HLO cost analysis counts a while-loop body exactly ONCE, so a
+scanned-over-layers model under-reports FLOPs by the trip count. The
+roofline therefore measures PROBE compiles — the same program at reduced,
+UNROLLED layer counts — and extrapolates linearly to the full depth
+(per-layer cost is layer-index independent; the probe plans below make the
+algebra exact per layer family). The full scanned artifact still supplies
+memory_analysis (what actually fits on chip).
+
+Collective bytes are parsed from the post-partitioning HLO text: every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
+costed with ring-model wire bytes per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.configs.base import get_config
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16
+    hbm_bw: float = 819e9               # B/s
+    link_bw: float = 50e9               # B/s effective per chip
+
+
+V5E = HW()
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\([^)]*\)\s*->")
+_CONVERT_RE = re.compile(r"=\s*f32\[([\d,]*)\][^\s]*\s+convert\(")
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(\w+)\[([\d,]*)\][^\s]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _wire_bytes(kind: str, out_bytes: float, group: int) -> float:
+    """Ring-model bytes moved per chip."""
+    if group <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (group - 1) / group * out_bytes
+    if kind == "all-gather":            # output = gathered result
+        return (group - 1) / group * out_bytes
+    if kind == "reduce-scatter":        # output = one shard
+        return (group - 1) * out_bytes
+    if kind == "all-to-all":
+        return (group - 1) / group * out_bytes
+    return out_bytes                    # collective-permute
+
+
+def convert_emulation_bytes(hlo_text: str) -> float:
+    """Bytes attributable to standalone bf16→f32 ``convert`` ops outside
+    fusions. The CPU dot emitter cannot consume bf16, so float-
+    normalization wraps every dot in f32 converts — ops that DO NOT EXIST
+    on the TPU target (native bf16 MXU) yet count 6 B/elem (2 read + 4
+    write) in cost_analysis. Subtracting them gives a closer (still
+    conservative) estimate of target HBM traffic."""
+    total = 0.0
+    in_fusion = False
+    for line in hlo_text.splitlines():
+        mc = _COMP_RE.match(line.strip())
+        if mc:
+            in_fusion = "fused" in mc.group(1) or "fusion" in mc.group(1)
+            continue
+        if in_fusion:
+            continue
+        m = _CONVERT_RE.search(line)
+        if m:
+            n = 1
+            for d in m.group(1).split(","):
+                if d:
+                    n *= int(d)
+            total += 6.0 * n
+    return total
+
+
+def collective_bytes(hlo_text: str, default_group: int
+                     ) -> Tuple[float, Dict[str, float]]:
+    """Per-chip wire bytes summed over every collective in the module.
+    Returns (total, by-kind breakdown). Call on UNROLLED modules only
+    (while bodies appear once in the text)."""
+    total = 0.0
+    by_kind: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        kind = None
+        if m and m.group(3):
+            kind = m.group(3)
+            if m.group(1):
+                out_b = _shape_bytes(m.group(1), m.group(2))
+            else:
+                out_b = sum(_shape_bytes(d, s) for d, s in
+                            _SHAPE_RE.findall(line.split(kind)[0]))
+        else:
+            mt = _TUPLE_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                out_b = sum(_shape_bytes(d, s) for d, s in
+                            _SHAPE_RE.findall(mt.group(1)))
+        if kind is None:
+            continue
+        g = _group_size(line, default_group)
+        w = _wire_bytes(kind, out_b, g)
+        total += w
+        by_kind[kind] = by_kind.get(kind, 0.0) + w
+    return total, by_kind
+
+
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float = 0.0                  # per chip
+    hbm_bytes: float = 0.0              # per chip (raw cost_analysis)
+    wire_bytes: float = 0.0             # per chip
+    convert_bytes: float = 0.0          # CPU bf16-emulation artifact
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def hbm_bytes_corrected(self) -> float:
+        return max(self.hbm_bytes - self.convert_bytes, 0.0)
+
+    def seconds(self, hw: HW = V5E) -> Dict[str, float]:
+        return {"compute": self.flops / hw.peak_flops,
+                "memory": self.hbm_bytes_corrected / hw.hbm_bw,
+                "memory_raw": self.hbm_bytes / hw.hbm_bw,
+                "collective": self.wire_bytes / hw.link_bw}
+
+    def _terms(self, hw: HW = V5E) -> Dict[str, float]:
+        s = self.seconds(hw)
+        return {k: s[k] for k in ("compute", "memory", "collective")}
+
+    def dominant(self, hw: HW = V5E) -> str:
+        t = self._terms(hw)
+        return max(t, key=t.get)
+
+    def step_time(self, hw: HW = V5E) -> float:
+        """Roofline-optimistic step time: terms overlap perfectly."""
+        return max(self._terms(hw).values())
+
+    def combine(self, other: "RooflineTerms", coeff: float
+                ) -> "RooflineTerms":
+        bk = dict(self.by_kind)
+        for k, v in other.by_kind.items():
+            bk[k] = bk.get(k, 0.0) + coeff * v
+        return RooflineTerms(
+            flops=self.flops + coeff * other.flops,
+            hbm_bytes=self.hbm_bytes + coeff * other.hbm_bytes,
+            wire_bytes=self.wire_bytes + coeff * other.wire_bytes,
+            convert_bytes=self.convert_bytes + coeff * other.convert_bytes,
+            by_kind=bk)
+
+
+def analyze_compiled(compiled, default_group: int) -> RooflineTerms:
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    wire, by_kind = collective_bytes(text, default_group)
+    return RooflineTerms(
+        flops=float(ca.get("flops", 0.0)),
+        hbm_bytes=float(ca.get("bytes accessed", 0.0)),
+        wire_bytes=wire,
+        convert_bytes=convert_emulation_bytes(text),
+        by_kind=by_kind)
+
+
+# --------------------------------------------------------------------------- #
+# Probe plans: [(layer_override, coeff)] with Σ coeff·F(probe) = F(full).
+# --------------------------------------------------------------------------- #
+def probe_plan(arch: str) -> List[Tuple[Dict[str, int], float]]:
+    cfg = get_config(arch)
+    L = cfg.num_layers
+    if arch == "deepseek-v2-lite-16b":
+        # 1 dense + 26 MoE: F = F(2) + 25·(F(3)−F(2))
+        return [({"num_layers": 2}, -24.0), ({"num_layers": 3}, 25.0)]
+    if arch == "recurrentgemma-9b":
+        # 38 = 12×(r,r,a) + (r,r): F = F(3) + 11·(F(6)−F(3)) + (F(5)−F(3))
+        return [({"num_layers": 3}, -11.0), ({"num_layers": 6}, 11.0),
+                ({"num_layers": 5}, 1.0)]
+    if arch == "whisper-large-v3":
+        # F = F(2,2) + 30·(F(3,2)−F(2,2)) + 30·(F(2,3)−F(2,2))
+        return [({"encoder_layers": 2, "num_layers": 2}, -59.0),
+                ({"encoder_layers": 3, "num_layers": 2}, 30.0),
+                ({"encoder_layers": 2, "num_layers": 3}, 30.0)]
+    # homogeneous stack: F = (2−L)·F(1) + (L−1)·F(2)
+    return [({"num_layers": 1}, float(2 - L)), ({"num_layers": 2},
+                                                float(L - 1))]
+
+
+def roofline_for_cell(probe_terms: List[Tuple[RooflineTerms, float]]
+                      ) -> RooflineTerms:
+    out = RooflineTerms()
+    for terms, coeff in probe_terms:
+        out = out.combine(terms, coeff)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+def model_flops(arch: str, mode: str, tokens: int) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); ×3 fwd+bwd ratio
+    already inside the 6 for training; inference fwd-only = 2·N·D."""
+    cfg = get_config(arch)
+    n = cfg.active_param_count()
+    per_tok = 6.0 * n if mode == "train" else 2.0 * n
+    return per_tok * tokens
+
+
+def useful_ratio(arch: str, mode: str, tokens: int, hlo_flops_global: float
+                 ) -> float:
+    if hlo_flops_global <= 0:
+        return 0.0
+    return model_flops(arch, mode, tokens) / hlo_flops_global

@@ -1,0 +1,5 @@
+from repro.serving.engine import Engine, VendorProfile, page_specs_for  # noqa: F401
+from repro.serving.paged_cache import BlockAllocator, KVPageSpec        # noqa: F401
+from repro.serving.request import Request, State                        # noqa: F401
+from repro.serving.scheduler import GlobalScheduler                     # noqa: F401
+from repro.serving.server import Server, ServeResult                    # noqa: F401

@@ -1,0 +1,292 @@
+"""Model-instance engine: prefill, continuous-batching paged decode.
+
+One Engine == one "model instance" in the paper's sense (a P instance, a D
+instance, or an integrated instance). Vendor-specific VRAM management is the
+engine's ``KVPageSpec`` (block size / layout / dtype); compute dtype and the
+logical TP degree used for KV sharding complete the vendor profile.
+
+The engine is device-agnostic: on this CPU container it runs the tiny-model
+functional path; on a TPU mesh the same jitted callables are pjit'd by the
+launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.serving.paged_cache import BlockAllocator, KVPageSpec
+from repro.serving.request import Request, State
+
+
+def page_specs_for(cfg: ModelConfig, block_size: int, layout: str,
+                   dtype: str) -> Dict[str, KVPageSpec]:
+    if cfg.attention_kind == "mla":
+        m = cfg.mla
+        return {
+            "ckv": KVPageSpec(block_size, layout, dtype, 1, m.kv_lora_rank),
+            "kpe": KVPageSpec(block_size, layout, dtype, 1, m.qk_rope_head_dim),
+        }
+    return {"kv": KVPageSpec(block_size, layout, dtype,
+                             max(cfg.num_kv_heads, 1), cfg.hd)}
+
+
+@dataclasses.dataclass(frozen=True)
+class VendorProfile:
+    """The 'vendor' of an instance — everything the heterogeneous compat
+    module must align across instances."""
+    name: str
+    block_size: int = 16
+    layout: str = "nbhd"
+    kv_dtype: str = "float32"
+    tp: int = 1                 # logical TP degree of stored KV shards
+    hardware: str = "tpu-v5e"   # planner HardwareSpec key
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    decode_steps: int = 0
+    decode_tokens: int = 0
+    prefill_seconds: float = 0.0
+    decode_seconds: float = 0.0
+    failures_injected: int = 0
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+class Engine:
+    """One model instance with paged KV and slot-based continuous batching."""
+
+    def __init__(self, name: str, cfg: ModelConfig, params,
+                 vendor: VendorProfile, *, num_blocks: int = 256,
+                 max_batch: int = 8, max_seq_len: int = 512,
+                 mem_len: int = 0, role: str = "both"):
+        self.name = name
+        self.cfg = cfg
+        self.params = params
+        self.vendor = vendor
+        self.role = role
+        self.max_batch = max_batch
+        self.max_seq_len = max_seq_len
+        self.mem_len = mem_len or (cfg.max_source_len if cfg.is_enc_dec else 0)
+        self.specs = page_specs_for(cfg, vendor.block_size, vendor.layout,
+                                    vendor.kv_dtype)
+        self.block_size = vendor.block_size
+        self.max_blocks_per_seq = -(-max_seq_len // vendor.block_size)
+        self.allocator = BlockAllocator(num_blocks)
+        self.allocator.allocate("__scratch__", 1)   # trash page for idle slots
+        self._scratch_block = self.allocator.blocks_of("__scratch__")[0]
+        self.caches = M.init_paged_caches(cfg, self.specs, num_blocks,
+                                          batch=max_batch, mem_len=self.mem_len)
+        # slot bookkeeping (host side)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.block_tables = np.full((max_batch, self.max_blocks_per_seq),
+                                    self._scratch_block, np.int32)
+        self.seq_lens = np.zeros((max_batch,), np.int32)
+        self.last_token = np.zeros((max_batch,), np.int32)
+        self.stats = EngineStats()
+        self.failed = False
+        self._rng = np.random.default_rng(abs(hash(name)) % (2 ** 31))
+        self._build_jits()
+
+    # ------------------------------------------------------------------ #
+    def _build_jits(self) -> None:
+        cfg = self.cfg
+
+        @partial(jax.jit, static_argnames=("prompt_len",))
+        def _prefill(params, inputs, prompt_len):
+            caches = M.init_caches(cfg, inputs["tokens"].shape[0], prompt_len,
+                                   cfg.cdtype, mem_len=self.mem_len)
+            return M.prefill(params, cfg, inputs, caches)
+
+        @jax.jit
+        def _decode(params, tokens, seq_lens, block_table, write_blocks,
+                    write_slots, caches):
+            return M.decode_step_paged(params, cfg, tokens, seq_lens,
+                                       block_table, write_blocks, write_slots,
+                                       caches, self.specs)
+
+        def _place(caches, updates, slot):
+            """Write per-sequence rows (states / cross kv) into batch axis 1."""
+            def upd(c, u):
+                return c.at[:, slot].set(u.astype(c.dtype))
+            return jax.tree.map(upd, caches, updates)
+
+        self._prefill_fn = _prefill
+        self._decode_fn = _decode
+        self._place_fn = jax.jit(_place, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------ #
+    # Prefill (P role)
+    # ------------------------------------------------------------------ #
+    def prefill(self, req: Request) -> Dict[str, Any]:
+        """Run prefill for one request; returns the handoff package:
+        {"first_token", "kv": per-group list, "states", "cross", "logits"}.
+
+        The KV part stays in *this* engine's canonical per-layer form — the
+        transfer module converts it to the wire and the D instance's format.
+        """
+        if self.failed:
+            raise RuntimeError(f"instance {self.name} is down")
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        inputs: Dict[str, Any] = {"tokens": tokens}
+        if req.frames is not None:
+            inputs["frames"] = jnp.asarray(req.frames)[None]
+        if req.patches is not None:
+            inputs["patches"] = jnp.asarray(req.patches)[None]
+        plen = req.prompt_len + (req.patches.shape[0] if req.patches is not None else 0)
+        last_logits, caches = self._prefill_fn(self.params, inputs, plen)
+        first_token = self._sample(np.asarray(last_logits), req)[0]
+        package = self._package_handoff(caches, plen)
+        package["first_token"] = int(first_token)
+        package["seq_len"] = plen
+        self.stats.prefill_tokens += plen
+        self.stats.prefill_seconds += time.perf_counter() - t0
+        return package
+
+    def _package_handoff(self, caches, seq_len: int) -> Dict[str, Any]:
+        """Extract per-layer canonical KV (+ states / cross) for transfer."""
+        cfg = self.cfg
+        groups = M.block_groups(cfg)
+        kv, states, cross = [], [], []
+        for gi, g in enumerate(groups):
+            for pi, kind in enumerate(g.kinds):
+                c = caches[gi][pi]
+                if kind == "ssd" or kind == "rglru":
+                    states.append(("state", gi, pi,
+                                   jax.tree.map(lambda x: x[:, 0], c)))
+                    continue
+                self_c = c["self"] if isinstance(c, dict) else c
+                if cfg.attention_kind == "mla":
+                    kv.append(("mla", gi, pi, {
+                        "ckv": self_c.ckv[:, 0, :seq_len],       # (count,S,lora)
+                        "kpe": self_c.kpe[:, 0, :seq_len]}))
+                else:
+                    cap = self_c.k.shape[2]
+                    s = min(seq_len, cap)
+                    kv.append(("kv", gi, pi, {
+                        # (count, S', kv, hd) — last `cap` tokens for SWA
+                        "k": self_c.k[:, 0, :s] if cap >= seq_len else self_c.k[:, 0],
+                        "v": self_c.v[:, 0, :s] if cap >= seq_len else self_c.v[:, 0],
+                        "pos": self_c.pos[:, 0]}))
+                if isinstance(c, dict):                          # enc-dec cross
+                    cross.append((gi, pi, {
+                        "cross_k": c["cross_k"][:, 0],
+                        "cross_v": c["cross_v"][:, 0],
+                        "mem_len": c["mem_len"][:, 0]}))
+        return {"kv": kv, "states": states, "cross": cross}
+
+    # ------------------------------------------------------------------ #
+    # Decode (D role)
+    # ------------------------------------------------------------------ #
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def load(self) -> float:
+        """Outstanding work (for the global scheduler's load-aware routing)."""
+        active = sum(1 for r in self.slot_req if r is not None)
+        return active / self.max_batch
+
+    def can_admit(self, seq_len: int, new_tokens: int) -> bool:
+        need = -(-(seq_len + new_tokens) // self.block_size)
+        return (not self.failed and len(self.free_slots()) > 0
+                and self.allocator.can_allocate(need)
+                and seq_len + new_tokens <= self.max_seq_len)
+
+    def add_sequence(self, req: Request, package: Dict[str, Any],
+                     materialize_fn) -> int:
+        """Admit a transferred request into a decode slot.
+
+        ``materialize_fn(engine, slot, block_ids, package)`` is provided by
+        the disagg orchestrator (it owns the compat conversion)."""
+        if self.failed:
+            raise RuntimeError(f"instance {self.name} is down")
+        slot = self.free_slots()[0]
+        seq_len = package["seq_len"]
+        nblocks = -(-(seq_len + req.max_new_tokens) // self.block_size)
+        nblocks = min(nblocks, self.max_blocks_per_seq)
+        block_ids = self.allocator.allocate(req.req_id, nblocks)
+        self.block_tables[slot, :] = self._scratch_block
+        self.block_tables[slot, :nblocks] = block_ids
+        self.seq_lens[slot] = seq_len
+        self.last_token[slot] = package["first_token"]
+        self.slot_req[slot] = req
+        materialize_fn(self, slot, np.asarray(block_ids, np.int32), package)
+        return slot
+
+    def release(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        if req is not None:
+            self.allocator.free(req.req_id)
+        self.slot_req[slot] = None
+        self.seq_lens[slot] = 0
+        self.block_tables[slot, :] = self._scratch_block
+
+    def decode_step(self) -> List[Tuple[int, Request, int]]:
+        """One continuous-batching step. Returns [(slot, request, token)]."""
+        if self.failed:
+            raise RuntimeError(f"instance {self.name} is down")
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return []
+        t0 = time.perf_counter()
+        write_slots = self.seq_lens % self.block_size
+        write_block_idx = self.seq_lens // self.block_size
+        write_blocks = self.block_tables[np.arange(self.max_batch),
+                                         np.minimum(write_block_idx,
+                                                    self.max_blocks_per_seq - 1)]
+        idle = np.asarray([r is None for r in self.slot_req])
+        write_blocks = np.where(idle, self._scratch_block, write_blocks)
+        logits, self.caches = self._decode_fn(
+            self.params, jnp.asarray(self.last_token[:, None]),
+            jnp.asarray(self.seq_lens), jnp.asarray(self.block_tables),
+            jnp.asarray(write_blocks.astype(np.int32)),
+            jnp.asarray(write_slots.astype(np.int32)), self.caches)
+        logits = np.asarray(logits[:, 0])
+        out = []
+        for slot in active:
+            req = self.slot_req[slot]
+            tok = self._sample(logits[slot:slot + 1], req)[0]
+            self.seq_lens[slot] += 1
+            self.last_token[slot] = tok
+            out.append((slot, req, int(tok)))
+        self.stats.decode_steps += 1
+        self.stats.decode_tokens += len(active)
+        self.stats.decode_seconds += time.perf_counter() - t0
+        return out
+
+    # ------------------------------------------------------------------ #
+    def _sample(self, logits: np.ndarray, req: Request) -> np.ndarray:
+        if req.temperature <= 0.0:
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        z = logits.astype(np.float64) / req.temperature
+        z -= z.max(axis=-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(axis=-1, keepdims=True)
+        return np.asarray([self._rng.choice(p.shape[-1], p=p[i])
+                           for i in range(p.shape[0])], np.int32)
+
+    # -- fault injection ------------------------------------------------ #
+    def fail(self) -> None:
+        self.failed = True
+        self.stats.failures_injected += 1
+
+    def recover(self) -> None:
+        """Restart: all volatile KV state is lost (as on a real node)."""
+        self.failed = False
+        for slot in range(self.max_batch):
+            self.release(slot)
+        self.allocator = BlockAllocator(self.allocator.num_blocks)
+        self.allocator.allocate("__scratch__", 1)
+        self._scratch_block = self.allocator.blocks_of("__scratch__")[0]

@@ -1,0 +1,198 @@
+"""Global scheduler (paper Fig. 1-2): request routing across P and D pools.
+
+Responsibilities beyond the paper's workflow (required for 1000-node scale):
+  * load-aware routing (least outstanding work, straggler-penalized)
+  * fault tolerance: failed P → re-dispatch prefill; failed D → KV is lost,
+    re-prefill with the already-generated prefix appended (the standard
+    recovery in disaggregated serving)
+  * straggler mitigation: per-instance decode-latency EMA feeds a routing
+    penalty; stuck requests are re-dispatched after ``straggler_factor``×
+    the pool-median step time
+  * elastic scaling: instances join/leave at runtime (leave = drain first)
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.engine import Engine
+from repro.serving.request import Request, State
+
+if TYPE_CHECKING:                      # avoid core <-> serving import cycle
+    from repro.core.disagg import DisaggPipeline
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    submitted: int = 0
+    finished: int = 0
+    failed: int = 0
+    requeues: int = 0
+    p_dispatches: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: collections.defaultdict(int))
+    d_dispatches: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: collections.defaultdict(int))
+
+
+class GlobalScheduler:
+    def __init__(self, pipeline: "DisaggPipeline",
+                 clock: Callable[[], float] = time.monotonic,
+                 straggler_factor: float = 8.0):
+        self.pipeline = pipeline
+        self.clock = clock
+        self.straggler_factor = straggler_factor
+        self.p_pool: Dict[str, Engine] = {}
+        self.d_pool: Dict[str, Engine] = {}
+        self.pending: collections.deque[Request] = collections.deque()
+        self.finished: List[Request] = []
+        self.stats = SchedulerStats()
+        self._ema: Dict[str, float] = {}          # decode step latency EMA
+        self._draining: set = set()
+
+    # -- elastic pool management ----------------------------------------- #
+    def add_instance(self, engine: Engine, role: Optional[str] = None) -> None:
+        role = role or engine.role
+        if role in ("prefill", "both"):
+            self.p_pool[engine.name] = engine
+        if role in ("decode", "both"):
+            self.d_pool[engine.name] = engine
+
+    def remove_instance(self, name: str) -> None:
+        """Elastic scale-down: stop routing to it; it drains naturally."""
+        self._draining.add(name)
+
+    def _routable(self, pool: Dict[str, Engine]) -> List[Engine]:
+        return [e for n, e in pool.items()
+                if not e.failed and n not in self._draining]
+
+    # -- routing ----------------------------------------------------------- #
+    def _penalty(self, e: Engine) -> float:
+        base = self._ema.get(e.name, 0.0)
+        emas = [v for v in self._ema.values() if v > 0]
+        med = float(np.median(emas)) if emas else 0.0
+        straggler = base / med if med > 0 else 1.0
+        return e.load() + max(straggler - 1.0, 0.0)
+
+    def _pick_p(self) -> Optional[Engine]:
+        cands = self._routable(self.p_pool)
+        return min(cands, key=self._penalty) if cands else None
+
+    def _pick_d(self, req: Request, seq_len: int) -> Optional[Engine]:
+        cands = [e for e in self._routable(self.d_pool)
+                 if e.can_admit(seq_len, req.max_new_tokens)]
+        return min(cands, key=self._penalty) if cands else None
+
+    # -- lifecycle ---------------------------------------------------------- #
+    def submit(self, req: Request) -> None:
+        req.arrival_time = req.arrival_time or self.clock()
+        self.pending.append(req)
+        self.stats.submitted += 1
+
+    def _requeue(self, req: Request, engine: Engine) -> None:
+        """Failure/straggler path: re-prefill with the generated prefix
+        appended to the prompt. ``output_tokens`` keeps the already-streamed
+        tokens (and ``max_new_tokens`` stays put, so ``done`` still fires at
+        the original budget); the re-prefill's first token is the
+        continuation after the prefix."""
+        if req.output_tokens:
+            req.prompt = np.concatenate(
+                [req.prompt, np.asarray(req.output_tokens, req.prompt.dtype)])
+        req.retries += 1
+        req.state = State.QUEUED
+        self.stats.requeues += 1
+        self.pending.appendleft(req)
+
+    def _handle_failures(self) -> None:
+        for e in list(self.d_pool.values()):
+            if e.failed:
+                for slot, req in enumerate(e.slot_req):
+                    if req is not None:
+                        e.slot_req[slot] = None      # KV is gone with the node
+                        self._requeue(req, e)
+                e.recover()
+
+    def step(self) -> List[Tuple[Request, int]]:
+        """One scheduler tick. Returns emitted (request, token) pairs."""
+        self._handle_failures()
+        emitted: List[Tuple[Request, int]] = []
+
+        # 1. dispatch pending requests: prefill on P, handoff to D
+        still_pending: collections.deque = collections.deque()
+        while self.pending:
+            req = self.pending.popleft()
+            p_eng = self._pick_p()
+            patches = req.patches.shape[0] if req.patches is not None else 0
+            d_eng = self._pick_d(req, req.prompt_len + patches)
+            if p_eng is None or d_eng is None:
+                still_pending.append(req)
+                continue
+            try:
+                req.state = State.PREFILLING
+                req.prefill_instance = p_eng.name
+                req.decode_instance = d_eng.name
+                meta = self.pipeline.handoff(req, p_eng, d_eng)
+            except RuntimeError:
+                self._requeue(req, p_eng)
+                continue
+            self.stats.p_dispatches[p_eng.name] += 1
+            self.stats.d_dispatches[d_eng.name] += 1
+            req.state = State.DECODING
+            req.output_tokens.append(meta["first_token"])
+            if req.first_token_time is None:
+                req.first_token_time = self.clock()
+            emitted.append((req, meta["first_token"]))
+            req.decode_steps_at_dispatch = 0
+            if req.done:
+                self._finish(req, d_eng)
+        self.pending = still_pending
+
+        # 2. one decode step on every D engine
+        for e in self._routable(self.d_pool) + \
+                [self.d_pool[n] for n in list(self._draining)
+                 if n in self.d_pool and not self.d_pool[n].failed]:
+            active = any(r is not None for r in e.slot_req)
+            if not active:
+                continue
+            t0 = time.perf_counter()
+            try:
+                results = e.decode_step()
+            except RuntimeError:
+                continue            # picked up by _handle_failures next tick
+            dt = time.perf_counter() - t0
+            prev = self._ema.get(e.name, dt)
+            self._ema[e.name] = 0.8 * prev + 0.2 * dt
+            for slot, req, tok in results:
+                req.output_tokens.append(tok)
+                emitted.append((req, tok))
+                if req.done:
+                    self._finish(req, e, slot)
+        return emitted
+
+    def _finish(self, req: Request, engine: Engine,
+                slot: Optional[int] = None) -> None:
+        if slot is None:
+            try:
+                slot = engine.slot_req.index(req)
+            except ValueError:
+                slot = None
+        if slot is not None:
+            engine.release(slot)
+        req.state = State.FINISHED
+        req.finish_time = self.clock()
+        self.finished.append(req)
+        self.stats.finished += 1
+
+    def run(self, requests: List[Request], max_ticks: int = 10_000
+            ) -> List[Request]:
+        """Drive to completion (synchronous loop)."""
+        for r in requests:
+            self.submit(r)
+        for _ in range(max_ticks):
+            if self.stats.finished >= len(requests):
+                break
+            self.step()
+        return self.finished

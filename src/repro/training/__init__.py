@@ -1,0 +1,2 @@
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+from repro.training.train_step import TrainState, make_train_step, train_state_init

@@ -1,0 +1,164 @@
+"""Sharded checkpoint save/restore with an async writer (no orbax here).
+
+Layout on disk:
+  <dir>/step_<N>/
+    MANIFEST.json         — {"step": N, "leaves": [{"path", "file", "shape",
+                             "dtype"}], "meta": {...}}
+    leaf_<i>.npy          — one array per pytree leaf (np.save)
+
+Save gathers each leaf to host (works for single-process CPU and for
+fully-addressable shardings); restore rebuilds the pytree and, given a
+sharding tree, ``jax.device_put``s each leaf to its target sharding — i.e.
+restore works onto a *different* mesh shape than the save ran on (elastic
+restart), because the on-disk form is the unsharded logical array.
+
+The async writer moves np.save off the training thread; ``wait()`` joins
+outstanding writes (call before exiting / before deleting old steps).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+Params = Any
+
+
+def _flatten_with_paths(tree) -> List:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+class AsyncWriter:
+    def __init__(self):
+        self._q: "queue.Queue" = queue.Queue()
+        self._errors: List[BaseException] = []
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fn = item
+            try:
+                fn()
+            except BaseException as e:      # surfaced at wait()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def submit(self, fn) -> None:
+        self._q.put(fn)
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._errors:
+            raise self._errors[0]
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join()
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self.writer = AsyncWriter() if async_write else None
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree: Params,
+             meta: Optional[Dict[str, Any]] = None) -> str:
+        """Snapshot ``tree`` at ``step``. Returns the checkpoint path."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = path + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        leaves = _flatten_with_paths(tree)
+        manifest = {"step": step, "meta": meta or {}, "leaves": []}
+        arrays = []
+        for i, (kp, leaf) in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            fname = f"leaf_{i:05d}.npy"
+            manifest["leaves"].append({
+                "path": kp, "file": fname,
+                "shape": list(arr.shape), "dtype": str(arr.dtype)})
+            arrays.append((os.path.join(tmp, fname), arr))
+
+        def commit():
+            for f, a in arrays:
+                np.save(f, a, allow_pickle=False)
+            with open(os.path.join(tmp, "MANIFEST.json"), "w") as fh:
+                json.dump(manifest, fh)
+            if os.path.exists(path):
+                shutil.rmtree(path)
+            os.replace(tmp, path)          # atomic publish
+            self._gc()
+
+        if self.writer:
+            self.writer.submit(commit)
+        else:
+            commit()
+        return path
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self) -> None:
+        if self.writer:
+            self.writer.wait()
+
+    # ------------------------------------------------------------------ #
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Params,
+                shardings: Optional[Params] = None) -> Params:
+        """Rebuild the pytree saved at ``step``.
+
+        ``like``: template pytree (structure + dtypes). ``shardings``: same
+        structure of jax.sharding.Sharding — each leaf is device_put onto it
+        (elastic restart onto a different mesh)."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "MANIFEST.json")) as fh:
+            manifest = json.load(fh)
+        flat_like, treedef = jax.tree_util.tree_flatten(like)
+        assert len(flat_like) == len(manifest["leaves"]), \
+            (len(flat_like), len(manifest["leaves"]))
+        flat_sh = (jax.tree_util.tree_flatten(shardings)[0]
+                   if shardings is not None else [None] * len(flat_like))
+        leaves = []
+        for entry, tmpl, sh in zip(manifest["leaves"], flat_like, flat_sh):
+            arr = np.load(os.path.join(path, entry["file"]),
+                          allow_pickle=False)
+            out = jax.numpy.asarray(arr, dtype=tmpl.dtype)
+            if sh is not None:
+                out = jax.device_put(out, sh)
+            leaves.append(out)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore_meta(self, step: int) -> Dict[str, Any]:
+        path = os.path.join(self.dir, f"step_{step:08d}", "MANIFEST.json")
+        with open(path) as fh:
+            return json.load(fh)["meta"]

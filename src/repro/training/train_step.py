@@ -1,0 +1,92 @@
+"""Training step: loss → grads → AdamW, remat-friendly, pjit-shardable.
+
+``make_train_step(cfg, opt)`` returns a pure function
+  step(state, batch) -> (state, metrics)
+that the launcher jits with in/out shardings. Remat policy is already inside
+the model (scan-over-layers with jax.checkpoint around the block body).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+Params = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Params
+    opt: dict
+
+
+def train_state_init(rng: jax.Array, cfg: ModelConfig) -> TrainState:
+    params = M.init_params(rng, cfg)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def abstract_train_state(cfg: ModelConfig) -> TrainState:
+    """ShapeDtypeStruct train state (dry-run path, no allocation)."""
+    return jax.eval_shape(
+        lambda: train_state_init(jax.random.key(0), cfg))
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, *,
+                    remat: bool = True, n_micro: int = 1,
+                    accum_shardings=None):
+    """``n_micro > 1``: gradient accumulation — the global batch is split
+    into n_micro microbatches scanned sequentially; per-micro grads are
+    averaged into a bf16 accumulator.
+
+    ``accum_shardings``: optional pytree of NamedSharding for the
+    accumulator (ZeRO-2-style: the add lowers to a reduce-scatter over the
+    data axis, so the carried accumulator costs 1/dp of a model copy
+    instead of a full one)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch, remat=remat))(params)
+
+    def step(state: TrainState, batch: Dict[str, jax.Array]
+             ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        if n_micro == 1:
+            loss, grads = grads_of(state.params, batch)
+        else:
+            from repro.models import dist
+            micro = {k: v.reshape((n_micro, v.shape[0] // n_micro)
+                                  + v.shape[1:])
+                     for k, v in batch.items()}
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.bfloat16), state.params)
+            if accum_shardings is not None:
+                acc0 = jax.lax.with_sharding_constraint(acc0,
+                                                        accum_shardings)
+
+            def body(carry, mb):
+                acc, loss_sum = carry
+                l, g = grads_of(state.params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + (gi / n_micro).astype(jnp.bfloat16),
+                    acc, g)
+                if accum_shardings is not None:
+                    acc = jax.lax.with_sharding_constraint(acc,
+                                                           accum_shardings)
+                return (acc, loss_sum + l), None
+
+            (grads, loss), _ = jax.lax.scan(
+                body, (acc0, jnp.zeros((), jnp.float32)), micro,
+                unroll=True if dist.ctx().unroll else 1)
+            loss = loss / n_micro
+        params, opt_state, om = adamw_update(opt, state.params, grads,
+                                             state.opt)
+        metrics = {"loss": loss, **om}
+        return TrainState(params=params, opt=opt_state), metrics
+
+    return step

@@ -1,0 +1,116 @@
+"""Property tests (hypothesis) for the heterogeneous compatible module —
+the paper's core contribution: layout round-trips, TP merge/split identity,
+precision wire bounds."""
+import numpy as np
+from hypothesis import given, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compat import parallel_align, precision
+from repro.core.compat.precision import WireFormat
+from repro.serving import paged_cache as PC
+
+
+# --------------------------------------------------------------------------- #
+# Layout (VRAM management alignment)
+# --------------------------------------------------------------------------- #
+@given(layout=st.sampled_from(PC.LAYOUTS), nb=st.integers(1, 4),
+       bs=st.sampled_from([4, 8, 16]), kv=st.sampled_from([1, 2, 4]),
+       hd=st.sampled_from([8, 16]))
+def test_layout_roundtrip_identity(layout, nb, bs, kv, hd):
+    spec = PC.KVPageSpec(bs, layout, "float32", kv, hd)
+    canon = np.random.default_rng(0).normal(
+        size=(nb, bs, kv, hd)).astype(np.float32)
+    pages = PC.pages_from_canonical(spec, jnp.asarray(canon))
+    back = PC.pages_to_canonical(spec, pages)
+    np.testing.assert_array_equal(np.asarray(back), canon)
+
+
+@given(src_bs=st.sampled_from([4, 8, 16]), dst_bs=st.sampled_from([4, 8, 16]),
+       src_layout=st.sampled_from(PC.LAYOUTS),
+       dst_layout=st.sampled_from(PC.LAYOUTS),
+       seq=st.integers(1, 40))
+def test_flatten_to_1d_transfer_preserves_tokens(src_bs, dst_bs, src_layout,
+                                                 dst_layout, seq):
+    """The paper's general method: 1-D wire stream is layout-invariant."""
+    kv, hd = 2, 8
+    src = PC.KVPageSpec(src_bs, src_layout, "float32", kv, hd)
+    dst = PC.KVPageSpec(dst_bs, dst_layout, "float32", kv, hd)
+    kvd = np.random.default_rng(1).normal(size=(seq, kv, hd)).astype(np.float32)
+    sp = PC.init_pool(src, src.blocks_for(seq))
+    sp = PC.scatter_sequence(src, sp, jnp.arange(src.blocks_for(seq)),
+                             jnp.asarray(kvd))
+    wire = PC.gather_sequence(src, sp, jnp.arange(src.blocks_for(seq)), seq)
+    dp = PC.init_pool(dst, dst.blocks_for(seq))
+    dp = PC.scatter_sequence(dst, dp, jnp.arange(dst.blocks_for(seq)), wire)
+    got = PC.gather_sequence(dst, dp, jnp.arange(dst.blocks_for(seq)), seq)
+    np.testing.assert_array_equal(np.asarray(got), kvd)
+
+
+# --------------------------------------------------------------------------- #
+# Parallel-strategy alignment (Fig. 4)
+# --------------------------------------------------------------------------- #
+@given(kv_heads=st.sampled_from([4, 8, 16]),
+       tp_p=st.sampled_from([1, 2, 4, 8]), tp_d=st.sampled_from([1, 2, 4, 8]))
+def test_tp_realign_merge_split_identity(kv_heads, tp_p, tp_d):
+    if kv_heads % tp_p or kv_heads % tp_d:
+        return
+    s, hd = 6, 4
+    full = np.random.default_rng(2).normal(
+        size=(s, kv_heads, hd)).astype(np.float32)
+    shards_p = [jnp.asarray(full[:, i * (kv_heads // tp_p):
+                                 (i + 1) * (kv_heads // tp_p)])
+                for i in range(tp_p)]
+    shards_d = parallel_align.realign_shards(shards_p, tp_d)
+    assert len(shards_d) == tp_d
+    rebuilt = np.concatenate([np.asarray(x) for x in shards_d], axis=1)
+    np.testing.assert_array_equal(rebuilt, full)
+    # round-trip back to tp_p
+    back = parallel_align.realign_shards(shards_d, tp_p)
+    for a, b in zip(back, shards_p):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(kv_heads=st.sampled_from([4, 8, 16]),
+       tp_p=st.sampled_from([1, 2, 4]), tp_d=st.sampled_from([1, 2, 4]))
+def test_transfer_pairs_cover_all_heads(kv_heads, tp_p, tp_d):
+    edges = parallel_align.transfer_pairs(kv_heads, tp_p, tp_d)
+    assert sum(h for _, _, h in edges) == kv_heads
+    per_d = {}
+    for p, d, h in edges:
+        per_d[d] = per_d.get(d, 0) + h
+    assert all(v == kv_heads // tp_d for v in per_d.values())
+
+
+# --------------------------------------------------------------------------- #
+# Precision alignment
+# --------------------------------------------------------------------------- #
+@given(dtype=st.sampled_from(["float32", "bfloat16", "float16"]))
+def test_raw_wire_roundtrip(dtype):
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(10, 2, 8)),
+                    jnp.dtype(dtype))
+    wire = WireFormat("raw", dtype)
+    pl, sc = precision.encode_wire(x, wire)
+    back = precision.decode_wire(pl, sc, wire, jnp.dtype(dtype))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@given(scale=st.floats(0.01, 100.0))
+def test_int8_wire_error_bound(scale):
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(32, 2, 16)),
+                    jnp.float32) * scale
+    wire = WireFormat("int8")
+    pl, sc = precision.encode_wire(x, wire)
+    assert pl.dtype == jnp.int8
+    back = precision.decode_wire(pl, sc, wire, jnp.float32)
+    err = np.max(np.abs(np.asarray(back) - np.asarray(x)))
+    bound = np.max(np.abs(np.asarray(x)), axis=-1) / 127.0 * 0.5001 + 1e-6
+    assert err <= bound.max() * 1.01 + 1e-6
+
+
+def test_wire_bytes_accounting():
+    assert precision.wire_bytes((4, 2, 8), WireFormat("raw", "bfloat16")) \
+        == 4 * 2 * 8 * 2
+    assert precision.wire_bytes((4, 2, 8), WireFormat("int8")) \
+        == int(4 * 2 * 8 * (1 + 4 / 64))

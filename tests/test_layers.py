@@ -1,0 +1,199 @@
+"""Layer-level unit tests: norms, RoPE, attention equivalences, recurrent
+blocks — the numerics the whole system rests on."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models import dist
+from repro.models import layers as L
+from tests.conftest import tiny
+
+
+def test_rms_norm_matches_numpy():
+    x = np.random.default_rng(0).normal(size=(4, 8)).astype(np.float32)
+    w = np.linspace(0.5, 1.5, 8).astype(np.float32)
+    got = L.rms_norm(jnp.asarray(w), jnp.asarray(x), 1e-6)
+    want = x / np.sqrt((x ** 2).mean(-1, keepdims=True) + 1e-6) * w
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-5)
+
+
+def test_rope_rotation_preserves_norm_and_relative_angle():
+    q = jax.random.normal(jax.random.key(0), (1, 6, 2, 8))
+    pos = jnp.arange(6)[None]
+    r = L.apply_rope(q, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(r), axis=-1),
+                               np.linalg.norm(np.asarray(q), axis=-1),
+                               rtol=1e-5)
+    # for FIXED content vectors, dot(rope(q,i), rope(k,j)) depends on i-j only
+    q1 = jnp.broadcast_to(jax.random.normal(jax.random.key(2), (1, 1, 2, 8)),
+                          (1, 6, 2, 8))
+    k1 = jnp.broadcast_to(jax.random.normal(jax.random.key(3), (1, 1, 2, 8)),
+                          (1, 6, 2, 8))
+    s = jnp.einsum("bqhd,bkhd->bhqk", L.apply_rope(q1, pos, 10_000.0),
+                   L.apply_rope(k1, pos, 10_000.0))
+    s = np.asarray(s)[0, 0]
+    np.testing.assert_allclose(s[2, 1], s[3, 2], atol=1e-4)
+    np.testing.assert_allclose(s[4, 1], s[5, 2], atol=1e-4)
+
+
+def test_sdpa_gqa_matches_repeated_heads():
+    b, s, h, kv, hd = 2, 5, 4, 2, 8
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    mask = L.causal_mask(s, s)
+    got = L.sdpa(q, k, v, mask)
+    krep = jnp.repeat(k, h // kv, axis=2)
+    vrep = jnp.repeat(v, h // kv, axis=2)
+    want = L.sdpa(q, krep, vrep, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [0, 7])
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+def test_chunked_sdpa_equals_masked_sdpa(window, chunk):
+    b, s, h, kv, hd = 2, 33, 4, 2, 16
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    lengths = jnp.asarray([33, 18])
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos = jnp.where(pos < lengths[:, None], pos, -1)
+    ref = L.sdpa(q, k, v, L.causal_mask(s, s, 0, window)
+                 + L.length_mask(lengths, s))
+    out = L.chunked_sdpa(q, k, v, pos, pos, causal=True, window=window,
+                         chunk=chunk)
+    for i, n in enumerate([33, 18]):
+        np.testing.assert_allclose(np.asarray(out)[i, :n],
+                                   np.asarray(ref)[i, :n], atol=2e-5)
+
+
+def test_kv_cache_ring_buffer_sliding_window():
+    """Writes past capacity wrap; decode equals full-context reference."""
+    cfg = tiny("swa", attention_kind="sliding", sliding_window=4,
+               num_layers=1)
+    p = L.init_attention(jax.random.key(0), cfg)
+    b, steps = 1, 10
+    xs = jax.random.normal(jax.random.key(1), (b, steps, cfg.d_model))
+    # reference: full forward
+    pos_full = jnp.arange(steps)[None]
+    ref, _ = L.attention_block(p, cfg, xs, pos_full, causal=True,
+                               window=cfg.sliding_window)
+    # decode: step one token at a time through a window-sized ring cache
+    cache = L.kv_cache_init(b, cfg.sliding_window, cfg.num_kv_heads,
+                            cfg.hd, jnp.float32)
+    outs = []
+    for t in range(steps):
+        o, cache = L.attention_decode(p, cfg, xs[:, t:t + 1],
+                                      jnp.asarray([[t]]),
+                                      cache, window=cfg.sliding_window)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_mla_decode_matches_prefill_logits():
+    cfg = tiny("mla", attention_kind="mla",
+               mla=MLAConfig(kv_lora_rank=32, qk_nope_head_dim=16,
+                             qk_rope_head_dim=8, v_head_dim=16),
+               num_layers=1)
+    p = L.init_mla(jax.random.key(0), cfg)
+    b, s = 1, 7
+    x = jax.random.normal(jax.random.key(1), (b, s, cfg.d_model))
+    pos = jnp.arange(s)[None]
+    full, (ckv, kpe) = L.mla_block(p, cfg, x, pos)
+    cache = L.mla_cache_init(b, s, cfg, jnp.float32)
+    cache = L.mla_cache_write(cache, ckv[:, :s - 1], kpe[:, :s - 1],
+                              pos[:, :s - 1])
+    dec, _ = L.mla_decode(p, cfg, x[:, -1:], pos[:, -1:], cache)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), atol=1e-4)
+
+
+def test_ssd_decode_matches_block():
+    cfg = tiny("ssm", family="ssm", attention_kind="none", num_kv_heads=0,
+               d_ff=0, num_heads=8, num_layers=1)
+    from repro.configs.base import SSMConfig
+    cfg = cfg.with_(ssm=SSMConfig(d_state=16, head_dim=16, expand=2,
+                                  d_conv=4, chunk_size=4))
+    p = L.init_ssd(jax.random.key(0), cfg)
+    b, s = 2, 9
+    x = jax.random.normal(jax.random.key(1), (b, s, cfg.d_model))
+    full, _ = L.ssd_block(p, cfg, x, L.ssm_state_init(b, cfg, jnp.float32))
+    st = L.ssm_state_init(b, cfg, jnp.float32)
+    outs = []
+    for t in range(s):
+        o, st = L.ssd_decode(p, cfg, x[:, t:t + 1], st)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), atol=2e-4)
+
+
+def test_rglru_decode_matches_block():
+    from repro.configs.base import RecurrentConfig, RECURRENT, ATTN
+    cfg = tiny("hy", family="hybrid", num_layers=1,
+               recurrent=RecurrentConfig(lru_width=32, d_conv=4,
+                                         block_pattern=(RECURRENT,)))
+    p = L.init_rglru(jax.random.key(0), cfg)
+    b, s = 2, 8
+    x = jax.random.normal(jax.random.key(1), (b, s, cfg.d_model))
+    full, _ = L.rglru_block(p, cfg, x, L.rglru_state_init(b, cfg, jnp.float32))
+    st = L.rglru_state_init(b, cfg, jnp.float32)
+    outs = []
+    for t in range(s):
+        o, st = L.rglru_decode(p, cfg, x[:, t:t + 1], st)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), atol=3e-5)
+
+
+def test_moe_shard_map_equals_local():
+    """At a generous capacity factor (no drops) the distributed
+    capacity-MoE must match the exact sort/ragged path bit-for-bit."""
+    from repro.configs.base import MoEConfig
+    cfg = tiny("moe", family="moe",
+               moe=MoEConfig(num_experts=4, num_shared_experts=1, top_k=2,
+                             d_ff_expert=32))
+    p = L.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 6, cfg.d_model))
+    ref = L.moe_mlp(p, cfg, x)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with dist.use(dist.DistContext(mesh=mesh, dp_axes=("data",),
+                                   model_axis="model", moe_shard_map=True,
+                                   moe_capacity_factor=8.0)):
+        got = jax.jit(lambda pp, xx: L.moe_mlp(pp, cfg, xx))(p, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+def test_moe_capacity_drop_semantics():
+    """At capacity factor 1.0, over-capacity tokens lose that expert's
+    contribution but outputs stay finite and within the convex hull scale."""
+    from repro.configs.base import MoEConfig
+    cfg = tiny("moe", family="moe",
+               moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=32))
+    p = L.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 24, cfg.d_model))
+    tight = L._moe_mlp_capacity(p, cfg, x, capacity_factor=1.0)
+    loose = L._moe_mlp_capacity(p, cfg, x, capacity_factor=8.0)
+    assert np.isfinite(np.asarray(tight)).all()
+    assert np.abs(np.asarray(tight)).max() \
+        <= np.abs(np.asarray(loose)).max() * 1.5 + 1e-3
+
+
+def test_moe_routing_no_token_drop():
+    """Every token reaches exactly top_k experts (sort-based, no capacity)."""
+    from repro.configs.base import MoEConfig
+    cfg = tiny("moe", family="moe",
+               moe=MoEConfig(num_experts=8, top_k=3, d_ff_expert=16))
+    p = L.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (64, cfg.d_model))
+    w, idx = L.moe_route(p, cfg, x)
+    assert idx.shape == (64, 3)
+    np.testing.assert_allclose(np.asarray(w).sum(-1), 1.0, atol=1e-5)
+    counts = np.bincount(np.asarray(idx).reshape(-1), minlength=8)
+    assert counts.sum() == 64 * 3

@@ -1,0 +1,105 @@
+"""Paged-cache substrate: allocator invariants (hypothesis state machine),
+pool ops, reference paged attention vs dense."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from hypothesis.stateful import (RuleBasedStateMachine, invariant,
+                                 precondition, rule)
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving import paged_cache as PC
+
+
+class AllocatorMachine(RuleBasedStateMachine):
+    """A live block is owned by exactly one sequence; free+owned partitions
+    the pool; freeing returns every owned block."""
+
+    def __init__(self):
+        super().__init__()
+        self.alloc = PC.BlockAllocator(32)
+        self.live = {}
+        self.counter = 0
+
+    @rule(n=st.integers(1, 6))
+    def allocate(self, n):
+        sid = f"s{self.counter}"
+        self.counter += 1
+        if self.alloc.can_allocate(n):
+            blocks = self.alloc.allocate(sid, n)
+            assert len(blocks) == n
+            self.live[sid] = blocks
+        else:
+            with pytest.raises(MemoryError):
+                self.alloc.allocate(sid, n)
+
+    @precondition(lambda self: self.live)
+    @rule(data=st.data())
+    def free(self, data):
+        sid = data.draw(st.sampled_from(sorted(self.live)))
+        n = self.alloc.free(sid)
+        assert n == len(self.live.pop(sid))
+
+    @rule(n=st.integers(1, 4))
+    def grow(self, n):
+        if self.live:
+            sid = sorted(self.live)[0]
+            if self.alloc.can_allocate(n):
+                self.live[sid] += self.alloc.allocate(sid, n)
+
+    @invariant()
+    def check(self):
+        self.alloc.check_invariants()
+        owned = sum(len(v) for v in self.live.values())
+        assert owned + self.alloc.free_blocks == 32
+
+
+TestAllocator = AllocatorMachine.TestCase
+
+
+@given(seq=st.integers(1, 50), bs=st.sampled_from([4, 8, 16]))
+def test_blocks_for(seq, bs):
+    spec = PC.KVPageSpec(bs, "nbhd", "float32", 1, 8)
+    nb = spec.blocks_for(seq)
+    assert (nb - 1) * bs < seq <= nb * bs
+
+
+def test_append_token_every_layout():
+    for layout in PC.LAYOUTS:
+        spec = PC.KVPageSpec(4, layout, "float32", 2, 8)
+        pool = PC.init_pool(spec, 6)
+        kv_tok = jnp.asarray(np.random.default_rng(0).normal(size=(3, 2, 8)),
+                             jnp.float32)
+        blocks = jnp.asarray([1, 2, 5], jnp.int32)
+        slots = jnp.asarray([0, 3, 2], jnp.int32)
+        pool = PC.append_token(spec, pool, blocks, slots, kv_tok)
+        canon = PC.pages_to_canonical(spec, pool)
+        for i in range(3):
+            np.testing.assert_array_equal(
+                np.asarray(canon[blocks[i], slots[i]]),
+                np.asarray(kv_tok[i]))
+
+
+def test_paged_attention_ref_matches_dense():
+    b, h, kv, hd, bs, pages = 2, 4, 2, 16, 4, 3
+    spec = PC.KVPageSpec(bs, "nbhd", "float32", kv, hd)
+    rng = np.random.default_rng(1)
+    seq_lens = jnp.asarray([7, 11], jnp.int32)
+    k = rng.normal(size=(b, bs * pages, kv, hd)).astype(np.float32)
+    v = rng.normal(size=(b, bs * pages, kv, hd)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(b, 1, h, hd)), jnp.float32)
+    k_pool = PC.init_pool(spec, b * pages + 1)
+    v_pool = PC.init_pool(spec, b * pages + 1)
+    table = np.arange(1, b * pages + 1).reshape(b, pages)
+    for i in range(b):
+        k_pool = PC.scatter_sequence(spec, k_pool, jnp.asarray(table[i]),
+                                     jnp.asarray(k[i]))
+        v_pool = PC.scatter_sequence(spec, v_pool, jnp.asarray(table[i]),
+                                     jnp.asarray(v[i]))
+    got = PC.paged_attention_ref(q, k_pool, v_pool, jnp.asarray(table),
+                                 seq_lens, spec)
+    from repro.models import layers as L
+    mask = L.length_mask(seq_lens, bs * pages)
+    want = L.sdpa(q, jnp.asarray(k), jnp.asarray(v), mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

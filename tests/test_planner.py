@@ -1,0 +1,154 @@
+"""Planner: simulator monotonicity properties (hypothesis), two-stage
+optimizer constraint satisfaction, and the paper's qualitative claims."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.configs.base import get_config
+from repro.core.planner import events
+from repro.core.planner.hardware import GPU_A, GPU_B, REGISTRY, get
+from repro.core.planner.optimizer import (optimize_decode, optimize_prefill,
+                                          plan_deployment)
+from repro.core.planner.simulator import InstanceModel, ParallelStrategy
+from repro.core.planner.workload import FIG8, Workload
+
+LLAMA = get_config("llama2-7b")
+
+
+# --------------------------------------------------------------------------- #
+# Simulator monotonicity (the properties the optimizer relies on)
+# --------------------------------------------------------------------------- #
+@given(s1=st.integers(64, 2048), s2=st.integers(64, 2048))
+def test_prefill_latency_monotone_in_seq(s1, s2):
+    m = InstanceModel(LLAMA, GPU_A, ParallelStrategy())
+    lo, hi = min(s1, s2), max(s1, s2)
+    assert m.prefill_latency(lo) <= m.prefill_latency(hi) + 1e-9
+
+
+@given(b1=st.integers(1, 128), b2=st.integers(1, 128))
+def test_decode_latency_monotone_in_batch(b1, b2):
+    m = InstanceModel(LLAMA, GPU_A, ParallelStrategy())
+    lo, hi = min(b1, b2), max(b1, b2)
+    assert m.decode_latency(lo, 512) <= m.decode_latency(hi, 512) + 1e-9
+
+
+@given(tp=st.sampled_from([1, 2, 4, 8]))
+def test_tp_shards_weights(tp):
+    m = InstanceModel(LLAMA, GPU_A, ParallelStrategy(tp=tp))
+    base = InstanceModel(LLAMA, GPU_A, ParallelStrategy())
+    np.testing.assert_allclose(m.weight_bytes_per_gpu(),
+                               base.weight_bytes_per_gpu() / tp, rtol=1e-6)
+
+
+@given(seq=st.integers(128, 4096))
+def test_vram_decode_grows_with_batch(seq):
+    m = InstanceModel(LLAMA, GPU_A, ParallelStrategy())
+    assert m.vram_decode(1, seq) < m.vram_decode(16, seq)
+
+
+def test_faster_hbm_decodes_faster():
+    fast = InstanceModel(LLAMA, GPU_A, ParallelStrategy())   # 2 TB/s HBM
+    slow = InstanceModel(LLAMA, GPU_B, ParallelStrategy())   # 1 TB/s HBM
+    assert fast.decode_latency(16, 1024) < slow.decode_latency(16, 1024)
+
+
+def test_more_tflops_prefills_faster():
+    a = InstanceModel(LLAMA, GPU_A, ParallelStrategy())      # 312 TF
+    b = InstanceModel(LLAMA, GPU_B, ParallelStrategy())      # 512 TF
+    assert b.prefill_latency(1024) < a.prefill_latency(1024)
+
+
+# --------------------------------------------------------------------------- #
+# Two-stage optimizer (paper Eqs. 1 & 4)
+# --------------------------------------------------------------------------- #
+def test_stage1_respects_constraints():
+    wl = Workload(qps=2.0, input_len=1024, output_len=1024,
+                  slo_ttft_s=0.5, slo_tpot_s=0.05)
+    res = optimize_prefill(LLAMA, GPU_B, wl)
+    m = InstanceModel(LLAMA, GPU_B, res.strategy)
+    assert m.prefill_latency(wl.input_len) <= wl.slo_ttft_s       # (c1)
+    assert m.fits(m.vram_prefill(wl.input_len))                   # (c2)
+    assert res.candidates_evaluated > 10
+
+
+def test_stage2_respects_constraints_and_covers_qps():
+    wl = Workload(qps=2.0, input_len=1024, output_len=1024,
+                  slo_ttft_s=0.5, slo_tpot_s=0.05)
+    res, y = optimize_decode(LLAMA, GPU_A, wl, required_qps=2.0)
+    assert res.latency_s <= wl.slo_tpot_s                         # (c1)
+    assert y * res.instance_capacity >= 2.0 * 0.999               # coverage
+
+
+def test_infeasible_slo_raises():
+    wl = Workload(qps=2.0, input_len=4096, output_len=64,
+                  slo_ttft_s=1e-4)
+    with pytest.raises(ValueError):
+        optimize_prefill(LLAMA, GPU_B, wl)
+
+
+def test_plan_deployment_end_to_end():
+    plan = plan_deployment(LLAMA, FIG8, p_hw=GPU_B, d_hw=GPU_A)
+    assert plan.n_prefill >= 1 and plan.n_decode >= 1
+    assert plan.qps_capacity >= FIG8.qps * 0.99
+    assert plan.cost_per_hour > 0
+    assert "P" in plan.ratio() and "D" in plan.ratio()
+
+
+def test_tighter_slo_needs_no_fewer_instances():
+    loose = Workload(qps=3.0, input_len=1024, output_len=512,
+                     slo_ttft_s=2.0, slo_tpot_s=0.2)
+    tight = Workload(qps=3.0, input_len=1024, output_len=512,
+                     slo_ttft_s=0.2, slo_tpot_s=0.03)
+    pl = plan_deployment(LLAMA, loose, GPU_B, GPU_A)
+    pt = plan_deployment(LLAMA, tight, GPU_B, GPU_A)
+    assert pt.n_prefill * pt.prefill.strategy.gpus \
+        + pt.n_decode * pt.decode.strategy.gpus \
+        >= pl.n_prefill * pl.prefill.strategy.gpus \
+        + pl.n_decode * pl.decode.strategy.gpus
+
+
+# --------------------------------------------------------------------------- #
+# Event simulator reproduces the paper's qualitative results
+# --------------------------------------------------------------------------- #
+def _models():
+    return (InstanceModel(LLAMA, GPU_B, ParallelStrategy()),
+            InstanceModel(LLAMA, GPU_A, ParallelStrategy()))
+
+
+def test_disagg_beats_integrated_at_long_context():
+    """Paper Figs. 9-10: cost-fair (same hardware pair), long context."""
+    wl = Workload(qps=2.0, input_len=1024, output_len=1024)
+    mP, mD = _models()
+    r_dis = events.simulate(LLAMA, wl, p_model=mP, d_model=mD,
+                            n_prefill=1, n_decode=1, duration_s=60)
+    r_int = events.simulate(LLAMA, wl, p_model=mP, d_model=mD,
+                            n_prefill=1, n_decode=1, mode="integrated",
+                            duration_s=60)
+    assert r_dis.throughput_tok_s() > r_int.throughput_tok_s()
+    assert r_dis.tpot_mean() < r_int.tpot_mean()
+
+
+def test_pd_ratio_saturates_short_context():
+    """Paper Fig. 7: 2P1D ≈ 3P1D at 256+256 QPS2."""
+    wl = Workload(qps=2.0, input_len=256, output_len=256)
+    mP, mD = _models()
+    tput = {}
+    for n_p in (2, 3):
+        r = events.simulate(LLAMA, wl, p_model=mP, d_model=mD,
+                            n_prefill=n_p, n_decode=1, duration_s=60)
+        tput[n_p] = r.throughput_tok_s()
+    assert abs(tput[2] - tput[3]) / tput[2] < 0.05
+
+
+def test_ttft_grows_with_input_flat_in_output():
+    """Paper Fig. 6(a)."""
+    mP, mD = _models()
+    base = events.simulate(LLAMA, Workload(2, 256, 256), p_model=mP,
+                           d_model=mD, duration_s=40)
+    long_in = events.simulate(LLAMA, Workload(2, 1024, 256), p_model=mP,
+                              d_model=mD, duration_s=40)
+    long_out = events.simulate(LLAMA, Workload(2, 256, 1024), p_model=mP,
+                               d_model=mD, duration_s=40)
+    assert long_in.ttft_mean() > base.ttft_mean() * 1.5
+    assert abs(long_out.ttft_mean() - base.ttft_mean()) \
+        < 0.3 * base.ttft_mean()

@@ -1,0 +1,97 @@
+"""Roofline analysis unit tests: HLO collective parsing, ring-model wire
+bytes, probe-plan algebra, MODEL_FLOPS."""
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED
+from repro.configs.base import get_config
+from repro.roofline import analysis as RA
+
+HLO = """
+HloModule jit_step
+
+%fused_computation.1 (p0: f32[128,256]) -> f32[128,256] {
+  %c = f32[128,256]{1,0} convert(%p0)
+  ROOT %r = f32[128,256]{1,0} add(%c, %c)
+}
+
+ENTRY %main () -> f32[16,1024] {
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[16,1024]{1,0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %rs = f32[4,1024]{1,0} reduce-scatter(%z), replica_groups=[64,4]<=[256], dimensions={0}
+  %cv = f32[1024,512]{1,0} convert(%w)
+  %tup = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(%a, %b), replica_groups=[32,8]<=[256]
+  ROOT %out = f32[16,1024]{1,0} copy(%ar)
+}
+"""
+
+
+def test_collective_bytes_parses_all_kinds():
+    total, by_kind = RA.collective_bytes(HLO, default_group=16)
+    # all-gather: out 16*1024*2 B, group 16 → 15/16 × 32768
+    ag = 15 / 16 * 16 * 1024 * 2
+    # all-reduce: out 16*1024*4, group 4 → 2×3/4 × 65536
+    ar = 2 * 3 / 4 * 16 * 1024 * 4
+    # reduce-scatter: out 4*1024*4, group 4 → 3 × 16384
+    rs = 3 * 4 * 1024 * 4
+    # all-to-all: tuple outputs 2×(8*8*4), group 8 → 7/8 × 512
+    a2a = 7 / 8 * 2 * 8 * 8 * 4
+    assert by_kind["all-gather"] == pytest.approx(ag)
+    assert by_kind["all-reduce"] == pytest.approx(ar)
+    assert by_kind["reduce-scatter"] == pytest.approx(rs)
+    assert by_kind["all-to-all"] == pytest.approx(a2a)
+    assert total == pytest.approx(ag + ar + rs + a2a)
+
+
+def test_convert_bytes_skips_fusions():
+    # only the ENTRY-level convert counts: 1024*512 elems × 6 B
+    assert RA.convert_emulation_bytes(HLO) == 1024 * 512 * 6
+
+
+def test_terms_seconds_and_dominant():
+    t = RA.RooflineTerms(flops=197e12, hbm_bytes=819e9 * 3,
+                         wire_bytes=50e9 * 0.5, convert_bytes=819e9)
+    s = t.seconds()
+    assert s["compute"] == pytest.approx(1.0)
+    assert s["memory"] == pytest.approx(2.0)       # corrected: 3-1
+    assert s["memory_raw"] == pytest.approx(3.0)
+    assert s["collective"] == pytest.approx(0.5)
+    assert t.dominant() == "memory"
+    assert t.step_time() == pytest.approx(2.0)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_probe_plan_reconstructs_layer_counts(arch):
+    """Σ coeff·layers(probe) must equal the full model's layer count —
+    the linear-extrapolation identity the roofline rests on."""
+    cfg = get_config(arch)
+    plan = RA.probe_plan(arch)
+    total_dec = sum(c * o.get("num_layers", cfg.num_layers)
+                    for o, c in plan)
+    assert total_dec == pytest.approx(cfg.num_layers), arch
+    if cfg.is_enc_dec:
+        total_enc = sum(c * o.get("encoder_layers", cfg.encoder_layers)
+                        for o, c in plan)
+        assert total_enc == pytest.approx(cfg.encoder_layers)
+    # the fixed (non-layer) cost must appear exactly once
+    assert sum(c for _, c in plan) == pytest.approx(1.0)
+
+
+def test_model_flops_moe_uses_active_params():
+    dense = RA.model_flops("qwen3-4b", "train", 1000)
+    cfg = get_config("qwen3-4b")
+    assert dense == pytest.approx(6.0 * cfg.param_count() * 1000)
+    moe_cfg = get_config("mixtral-8x7b")
+    moe = RA.model_flops("mixtral-8x7b", "decode", 10)
+    assert moe == pytest.approx(2.0 * moe_cfg.active_param_count() * 10)
+    assert moe_cfg.active_param_count() < 0.4 * moe_cfg.param_count()
+
+
+def test_combine_linearity():
+    a = RA.RooflineTerms(flops=1.0, hbm_bytes=2.0, wire_bytes=3.0,
+                         convert_bytes=0.5, by_kind={"all-reduce": 3.0})
+    z = RA.RooflineTerms()
+    z = z.combine(a, 2.0).combine(a, -0.5)
+    assert z.flops == pytest.approx(1.5)
+    assert z.hbm_bytes == pytest.approx(3.0)
+    assert z.by_kind["all-reduce"] == pytest.approx(4.5)

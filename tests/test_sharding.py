@@ -1,0 +1,113 @@
+"""Launch-layer sharding rules: divisibility safety (hypothesis over every
+assigned arch), head/vocab padding properties, ZeRO spec construction,
+cell-grid shape."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED
+from repro.configs.base import get_config
+from repro.launch import sharding as SH
+from repro.launch.cells import LONG_OK, make_cells
+from repro.models import model as M
+
+
+def _axis_ok(shape, spec, sizes):
+    """Every sharded dim must be divisible by the product of its axes."""
+    for d, ax in enumerate(spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        if shape[d] % n:
+            return False
+    return True
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("mode", ["train", "prefill", "decode"])
+def test_param_specs_divisible(arch, mode):
+    sizes = {"data": 16, "model": 16}
+    cfg = SH.deploy_config(get_config(arch), 16, mode)
+    abs_p = M.abstract_params(cfg)
+    specs = SH.param_pspecs(abs_p, cfg, "model", 16)
+    flat_p = jax.tree.leaves(abs_p)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    n_sharded = 0
+    for leaf, spec in zip(flat_p, flat_s):
+        assert _axis_ok(leaf.shape, spec, sizes), (leaf.shape, spec)
+        if any(s is not None for s in spec):
+            n_sharded += 1
+    # the bulk of the parameters must actually shard
+    big = [leaf for leaf in flat_p if np.prod(leaf.shape) > 1e6]
+    big_sharded = [
+        (leaf, spec) for leaf, spec in zip(flat_p, flat_s)
+        if np.prod(leaf.shape) > 1e6 and any(s is not None for s in spec)]
+    if arch != "mamba2-370m":          # SSD params deliberately replicated
+        assert len(big_sharded) >= 0.8 * len(big), arch
+
+
+@given(h=st.integers(1, 128), kv=st.integers(1, 64),
+       axis=st.sampled_from([8, 16]))
+def test_pad_heads_properties(h, kv, axis):
+    if kv > h or h % kv:
+        return
+    cfg = get_config("qwen3-4b").with_(num_heads=h, num_kv_heads=kv,
+                                       head_dim=64)
+    out = SH.pad_heads(cfg, axis)
+    assert out.num_heads % axis == 0
+    assert out.num_heads % out.num_kv_heads == 0       # integral GQA groups
+    assert out.num_heads >= h and out.num_kv_heads >= kv
+    assert out.hd == 64                                # head_dim unchanged
+    if h % axis == 0 and h % kv == 0:
+        assert out.num_heads == h                      # identity when aligned
+
+
+@given(v=st.integers(1, 300000), axis=st.sampled_from([8, 16]))
+def test_pad_vocab(v, axis):
+    cfg = get_config("qwen3-4b").with_(vocab_size=v)
+    out = SH.pad_vocab(cfg, axis)
+    assert out.vocab_size % axis == 0
+    assert 0 <= out.vocab_size - v < axis
+
+
+def test_zero1_spec_adds_data_axis_once():
+    sp = SH.zero1_pspec(P(None, "model"), (1024, 512), ("data",), 16)
+    assert sp == P("data", "model")
+    # idempotent
+    sp2 = SH.zero1_pspec(sp, (1024, 512), ("data",), 16)
+    assert sp2 == sp
+    # indivisible dims stay unsharded
+    sp3 = SH.zero1_pspec(P(None,), (7,), ("data",), 16)
+    assert sp3 == P(None)
+
+
+def test_cell_grid_is_40_with_documented_skips():
+    cells = make_cells()
+    assert len(cells) == 40
+    skips = [c for c in cells if c.skip]
+    assert {c.arch for c in skips} == set(a for a in ASSIGNED
+                                          if a not in LONG_OK)
+    assert all(c.shape == "long_500k" for c in skips)
+    # decode capacity shards on a 16-way axis
+    for c in cells:
+        if c.mode == "decode" and not c.skip:
+            assert c.decode_capacity() % 16 == 0
+    # fp8 KV override is exactly the documented cell
+    fp8 = [(c.arch, c.shape) for c in cells
+           if c.cache_dtype != "bfloat16"]
+    assert fp8 == [("qwen1.5-32b", "decode_32k")]
+
+
+def test_batch_pspecs_respect_divisibility():
+    abs_b = {"tokens": jax.ShapeDtypeStruct((7, 128), np.int32),
+             "labels": jax.ShapeDtypeStruct((32, 128), np.int32)}
+    specs = SH.batch_pspecs(abs_b, ("data",), 16)
+    assert specs["tokens"] == P(None, None)      # 7 % 16 != 0 → replicated
+    assert specs["labels"] == P("data", None)

@@ -1,0 +1,67 @@
+"""TransferEngine (RDMA analogue): staging/read/complete lifecycle, pinned
+pool accounting + exhaustion, latency modeling."""
+import numpy as np
+import pytest
+
+from repro.core.kv_transfer import PinnedBufferPool, TransferEngine
+
+
+def test_stage_read_complete_lifecycle():
+    eng = TransferEngine(bandwidth_gbps=10.0)
+    payload = {"k": np.ones((4, 2, 8), np.float32)}
+    n = eng.stage("req1@P0", payload, {"seq": 4})
+    assert n == 4 * 2 * 8 * 4
+    assert eng.staged_keys() == ["req1@P0"]
+    got, meta = eng.read("req1@P0")
+    np.testing.assert_array_equal(got["k"], payload["k"])
+    assert meta == {"seq": 4}
+    eng.complete("req1@P0")
+    assert eng.staged_keys() == []
+    assert eng.pool.in_use == 0
+    assert eng.stats.transfers == 1
+    assert eng.stats.bytes_moved == n
+    assert eng.stats.modeled_seconds == pytest.approx(n / 10e9)
+
+
+def test_read_missing_key_raises():
+    eng = TransferEngine()
+    with pytest.raises(KeyError):
+        eng.read("nope")
+
+
+def test_pinned_pool_exhaustion_and_high_water():
+    pool = PinnedBufferPool(100)
+    pool.acquire(60)
+    pool.acquire(30)
+    assert pool.high_water == 90
+    with pytest.raises(MemoryError):
+        pool.acquire(20)
+    pool.release(60)
+    pool.acquire(20)
+    assert pool.in_use == 50
+    assert pool.high_water == 90
+
+
+def test_engine_pool_exhaustion_surfaces():
+    eng = TransferEngine(buffer_capacity_bytes=64)
+    with pytest.raises(MemoryError):
+        eng.stage("big", {"x": np.zeros(128, np.float32)})
+
+
+def test_drop_frees_buffer():
+    eng = TransferEngine()
+    eng.stage("k1", {"x": np.zeros(8, np.float32)})
+    eng.drop("k1")
+    assert eng.pool.in_use == 0
+    assert eng.staged_keys() == []
+
+
+def test_buffer_reuse_no_growth():
+    """Registered-once semantics: repeated stage/complete cycles must not
+    grow the high-water mark (the paper's 'reduce temporary allocation')."""
+    eng = TransferEngine()
+    for i in range(20):
+        eng.stage(f"k{i}", {"x": np.zeros(1024, np.float32)})
+        eng.read(f"k{i}")
+        eng.complete(f"k{i}")
+    assert eng.pool.high_water == 4096
