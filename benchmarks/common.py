@@ -7,21 +7,27 @@ from typing import Dict, List
 from repro.configs.base import get_config
 from repro.core.planner.events import SimResult, simulate
 from repro.core.planner.hardware import GPU_A, GPU_B
-from repro.core.planner.simulator import InstanceModel, ParallelStrategy
+from repro.core.planner.simulator import (FrameworkModel, InstanceModel,
+                                          ParallelStrategy)
 from repro.core.planner.workload import Workload
 
 CFG = get_config("llama2-7b")
 
 
-def models():
+def models(chunked_prefill: bool = False,
+           prefill_chunk_tokens: int = 512):
     """(P on GPU B — compute-strong, D on GPU A — HBM-strong)."""
-    return (InstanceModel(CFG, GPU_B, ParallelStrategy()),
-            InstanceModel(CFG, GPU_A, ParallelStrategy()))
+    fw = FrameworkModel(chunked_prefill=chunked_prefill,
+                        prefill_chunk_tokens=prefill_chunk_tokens)
+    return (InstanceModel(CFG, GPU_B, ParallelStrategy(), fw),
+            InstanceModel(CFG, GPU_A, ParallelStrategy(), fw))
 
 
 def run(wl: Workload, n_p: int = 1, n_d: int = 1, mode: str = "disagg",
-        duration_s: float = 120.0) -> SimResult:
-    mP, mD = models()
+        duration_s: float = 120.0, chunked_prefill: bool = False,
+        prefill_chunk_tokens: int = 512) -> SimResult:
+    mP, mD = models(chunked_prefill=chunked_prefill,
+                    prefill_chunk_tokens=prefill_chunk_tokens)
     return simulate(CFG, wl, p_model=mP, d_model=mD, n_prefill=n_p,
                     n_decode=n_d, mode=mode, duration_s=duration_s)
 

@@ -26,9 +26,22 @@ def main(duration: float = 120.0) -> dict:
         cap[(i, o)] = sat.throughput_tok_s() / (i + o) * o  # decode tokens
         print(row(f"{i}+{o}", r) + f"   capacity {cap[(i, o)]:7.0f} tok/s")
 
+    # chunked streaming handoff (serving stack's StreamedHandoff): the P→D
+    # wire overlaps chunk compute, so admission to decode is earlier at
+    # long context — TTFT (set by prefill itself) must not move.
+    wl_long = Workload(qps=2.0, input_len=1024, output_len=1024)
+    chk = run(wl_long, duration_s=duration, chunked_prefill=True)
+    print(row("1024+1024 chunked-stream", chk))
+
     ttft = {k: v.ttft_mean() for k, v in out.items()}
     tpot = {k: v.tpot_mean() for k, v in out.items()}
+    mono_long = out[(1024, 1024)]
     checks = {
+        "chunked stream ttft unchanged":
+            abs(chk.ttft_mean() - mono_long.ttft_mean())
+            <= 0.02 * mono_long.ttft_mean() + 1e-6,
+        "chunked stream tpot no worse":
+            chk.tpot_mean() <= mono_long.tpot_mean() * 1.02 + 1e-6,
         "ttft grows with input": ttft[(1024, 1024)] > ttft[(256, 256)] * 1.5,
         "ttft flat in output":
             abs(ttft[(512, 1024)] - ttft[(512, 512)])

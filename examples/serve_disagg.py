@@ -26,6 +26,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="tokens per streamed prefill chunk (0 = monolithic "
+                         "single-tick handoff)")
     args = ap.parse_args()
 
     # ~100M params: 16L × d640 (GQA 10/5), vocab 16k
@@ -38,8 +41,10 @@ def main():
     print(f"model: {cfg.name} ({n/1e6:.0f}M params)")
     params = M.init_params(jax.random.key(0), cfg)
 
+    # tp must divide the model's KV heads (5) — the KV shards on the wire
+    # are per-TP-rank slices of the head axis
     vendor_p = VendorProfile("vendorB", block_size=16, layout="nhbd",
-                             kv_dtype="float32", tp=2, hardware="gpu-b")
+                             kv_dtype="float32", tp=5, hardware="gpu-b")
     vendor_d = VendorProfile("vendorA", block_size=8, layout="nbhd",
                              kv_dtype="float32", tp=1, hardware="gpu-a")
 
@@ -52,7 +57,9 @@ def main():
 
     pipeline = DisaggPipeline(TransferEngine(bandwidth_gbps=25.0),
                               WireFormat("raw", "float32"))
-    sched = GlobalScheduler(pipeline)
+    # chunked streaming: each prefill chunk's KV hits the wire while the
+    # next chunk computes, and decode steps interleave with long prefills
+    sched = GlobalScheduler(pipeline, prefill_chunk=args.prefill_chunk)
     for e in (p0, d0, d1):
         sched.add_instance(e)
     server = Server(sched)
@@ -92,10 +99,14 @@ def main():
     print(f"requeues after failure: {sched.stats.requeues}")
     print(f"P dispatches: {dict(sched.stats.p_dispatches)}")
     print(f"D dispatches: {dict(sched.stats.d_dispatches)}")
-    print(f"KV wire: {pipeline.transfer.stats.transfers} transfers, "
-          f"{pipeline.transfer.stats.bytes_moved/1e6:.1f} MB, "
-          f"peak pinned buffer "
-          f"{pipeline.transfer.stats.peak_buffer_bytes/1e6:.1f} MB")
+    ts = pipeline.transfer.stats
+    print(f"KV wire: {ts.transfers} transfers ({ts.chunks} streamed chunks), "
+          f"{ts.bytes_moved/1e6:.1f} MB, "
+          f"peak pinned buffer {ts.peak_buffer_bytes/1e6:.1f} MB")
+    if ts.chunks:
+        print(f"overlap: {ts.overlap_modeled_seconds*1e6:.1f} µs of "
+              f"{ts.modeled_seconds*1e6:.1f} µs modeled wire time hidden "
+              f"under chunk compute")
     assert len(done) == len(reqs), "lost requests!"
     sample = reqs[0]
     print(f"sample stream {sample.req_id}: {sample.output_tokens[:12]}...")

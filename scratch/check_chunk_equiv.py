@@ -1,0 +1,75 @@
+"""Scratch: how close is incremental chunked prefill (decode-path over a
+dense prompt-capacity cache) to monolithic M.prefill, numerically?
+
+Finding (drove the PR-1 design): NOT bitwise in general — fp reassociation
+at ~1e-6 (one family happens to be exact), though greedy tokens agree. So
+the bit-for-bit guarantee of the streamed handoff is made at the *wire*
+layer (per-token encodings + RMW re-paging), while chunked *compute* is
+held to token-exactness — see tests/test_chunked_handoff.py.
+
+  PYTHONPATH=src python scratch/check_chunk_equiv.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+from repro.models import model as M
+
+
+def tiny(name, **kw) -> ModelConfig:
+    base = dict(name=name, family="dense", num_layers=3, d_model=64,
+                num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+                vocab_size=128, param_dtype="float32",
+                compute_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+FAMILIES = {
+    "dense": tiny("dense"),
+    "dense-bias-qknorm": tiny("dense-bias-qknorm", qkv_bias=True,
+                              qk_norm=True, num_kv_heads=2),
+    "mla": tiny("mla", attention_kind="mla",
+                mla=MLAConfig(kv_lora_rank=32, qk_nope_head_dim=16,
+                              qk_rope_head_dim=8, v_head_dim=16)),
+    "moe": tiny("moe", family="moe",
+                moe=MoEConfig(num_experts=4, num_shared_experts=1, top_k=2,
+                              d_ff_expert=32, first_dense_layers=1)),
+}
+
+
+def run(fam, plen=13, chunk=4):
+    cfg = FAMILIES[fam]
+    params = M.init_params(jax.random.key(1), cfg)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, plen), jnp.int32)[None]
+
+    # monolithic
+    caches0 = M.init_caches(cfg, 1, plen, cfg.cdtype)
+    last_full, caches_full = M.prefill(params, cfg, {"tokens": tokens}, caches0)
+
+    # chunked (decode path over the growing cache)
+    caches = M.init_caches(cfg, 1, plen, cfg.cdtype)
+    last = None
+    for c0 in range(0, plen, chunk):
+        c1 = min(c0 + chunk, plen)
+        pos = jnp.arange(c0, c1, dtype=jnp.int32)[None]
+        last, caches = M.decode_step(params, cfg, tokens[:, c0:c1], pos, caches)
+    last_chunk = last[:, -1]
+
+    ok_logits = bool(jnp.array_equal(last_full, last_chunk))
+    same_tok = int(jnp.argmax(last_full)) == int(jnp.argmax(last_chunk))
+    leaves_f = jax.tree.leaves(caches_full)
+    leaves_c = jax.tree.leaves(caches)
+    kv_exact = all(bool(jnp.array_equal(a, b)) for a, b in zip(leaves_f, leaves_c))
+    maxdiff = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+                  if a.dtype != jnp.int32 else 0.0
+                  for a, b in zip(leaves_f, leaves_c))
+    print(f"{fam:18s} logits_exact={ok_logits} tok_same={same_tok} "
+          f"kv_exact={kv_exact} maxdiff={maxdiff:.3e}")
+
+
+if __name__ == "__main__":
+    for fam in FAMILIES:
+        run(fam)

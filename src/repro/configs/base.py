@@ -122,6 +122,18 @@ class ModelConfig:
         return self.moe is not None and self.moe.num_experts > 0
 
     @property
+    def supports_chunked_prefill(self) -> bool:
+        """Incremental (chunk-at-a-time) prefill compute needs a pure
+        attention stack: no recurrent/SSM state threading, no encoder
+        memory, no multimodal prefix, no ring-buffer (sliding) eviction
+        during the prompt. Both the serving engine and the planner's
+        overlap model key off this."""
+        return (self.family in ("dense", "moe")
+                and self.attention_kind in ("full", "mla")
+                and not self.is_enc_dec
+                and self.frontend.kind not in ("vision", "audio"))
+
+    @property
     def pdtype(self):
         return jnp.dtype(self.param_dtype)
 

@@ -1,11 +1,24 @@
 """P/D disaggregation orchestrator — the paper's §III system glue.
 
-``DisaggPipeline`` moves one finished prefill from a P instance to a D
-instance through the three alignment components:
+``DisaggPipeline`` moves prefill KV from a P instance to a D instance
+through the three alignment components:
 
   1. precision  (``compat.precision``)  — wire dtype / int8 wire
   2. VRAM mgmt  (``compat.layout``)     — flatten-to-1D, re-page re-layout
   3. parallel   (``compat.parallel_align``) — TP merge/split of KV shards
+
+Two handoff shapes share the same encode/materialize core:
+
+  * ``handoff``          — monolithic: whole-prompt prefill, one wire
+    payload, one re-page (the paper's baseline transmission).
+  * ``begin_handoff`` / ``StreamedHandoff`` — chunked streaming: the D slot
+    is reserved up front, each prefill chunk's KV is encoded and staged
+    into the pinned pool while the next chunk computes, and the D instance
+    re-pages chunks as they land (Mooncake-style layer/chunk-wise
+    streaming); ``finalize`` ships recurrent/cross state and activates the
+    slot. Per-token wire encodings (raw cast, per-token-per-head int8
+    scales) make chunk splitting lossless, so streaming lands bit-identical
+    pool contents vs the monolithic wire.
 
 The same pipeline with P == D and a raw wire is the *integrated* baseline
 (prefill materializes into the local pools with no conversion), which is
@@ -13,7 +26,6 @@ what the paper's Figs. 9–10 compare against.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -24,15 +36,14 @@ from repro.core.compat import parallel_align, precision
 from repro.core.compat.precision import WireFormat
 from repro.core.kv_transfer import TransferEngine
 from repro.serving import paged_cache as PC
-from repro.serving.engine import Engine
+from repro.serving.engine import Engine, kv_entries_with_start
 from repro.serving.request import Request
 
 
-def _chronological(k: np.ndarray, pos: np.ndarray) -> Tuple[np.ndarray, int]:
-    """Ring-buffer shard (count, cap, kv, hd) + pos (count, cap) →
-    chronological (count, cap, kv, hd) and the absolute start position."""
-    order = np.argsort(pos[0])                    # same order across layers
-    return k[:, order], int(pos[0][order[0]])
+def _to_device(payload):
+    """Staged wire payload (host numpy) → device arrays for materialize."""
+    return jax.tree.map(
+        lambda x: jnp.asarray(x) if isinstance(x, np.ndarray) else x, payload)
 
 
 class DisaggPipeline:
@@ -44,46 +55,44 @@ class DisaggPipeline:
     # ------------------------------------------------------------------ #
     # P side: package → wire
     # ------------------------------------------------------------------ #
+    def _encode_entry(self, tp_p: int, kind: str, gi: int, pi: int,
+                      ent: Dict[str, Any]) -> Dict[str, Any]:
+        """One normalized KV entry (chronological, with absolute start) →
+        wire entry. Row-wise encodings keep this chunk-split invariant."""
+        if kind == "mla":
+            # latent cache is TP-replicated — ship rank-0 copy only
+            ckv, kpe = np.asarray(ent["ckv"]), np.asarray(ent["kpe"])
+            pl_c, sc_c = precision.encode_wire(
+                jnp.asarray(ckv)[..., None, :].reshape(-1, 1, ckv.shape[-1]),
+                self.wire)
+            pl_p, sc_p = precision.encode_wire(
+                jnp.asarray(kpe)[..., None, :].reshape(-1, 1, kpe.shape[-1]),
+                self.wire)
+            return {"kind": "mla", "gi": gi, "pi": pi,
+                    "count": ckv.shape[0], "seq": ckv.shape[1],
+                    "start": ent["start"],
+                    "payloads": [pl_c, pl_p], "scales": [sc_c, sc_p]}
+        k, v = np.asarray(ent["k"]), np.asarray(ent["v"])
+        count, s, _kv_heads, hd = k.shape
+        # TP shard split (P's parallel strategy), per Fig. 4
+        shards_k = np.split(k, tp_p, axis=2)
+        shards_v = np.split(v, tp_p, axis=2)
+        payloads, scales = [], []
+        for sh in shards_k + shards_v:
+            pl, sc = precision.encode_wire(
+                jnp.asarray(sh).reshape(-1, sh.shape[2], hd), self.wire)
+            payloads.append(pl)
+            scales.append(sc)
+        return {"kind": "kv", "gi": gi, "pi": pi, "count": count,
+                "seq": s, "start": ent["start"], "tp_p": tp_p,
+                "payloads": payloads, "scales": scales}
+
     def encode_package(self, p_engine: Engine, package: Dict[str, Any]
                        ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         tp_p = p_engine.vendor.tp
-        out_kv = []
-        for kind, gi, pi, entry in package["kv"]:
-            if kind == "mla":
-                # latent cache is TP-replicated — ship rank-0 copy only
-                ckv = np.asarray(entry["ckv"])       # (count, S, lora)
-                kpe = np.asarray(entry["kpe"])
-                pl_c, sc_c = precision.encode_wire(
-                    jnp.asarray(ckv)[..., None, :].reshape(-1, 1, ckv.shape[-1]),
-                    self.wire)
-                pl_p, sc_p = precision.encode_wire(
-                    jnp.asarray(kpe)[..., None, :].reshape(-1, 1, kpe.shape[-1]),
-                    self.wire)
-                out_kv.append({"kind": "mla", "gi": gi, "pi": pi,
-                               "count": ckv.shape[0], "seq": ckv.shape[1],
-                               "start": 0,
-                               "payloads": [pl_c, pl_p],
-                               "scales": [sc_c, sc_p]})
-                continue
-            k, v = np.asarray(entry["k"]), np.asarray(entry["v"])
-            start = 0
-            if "pos" in entry and k.shape[1] < np.max(entry["pos"]) + 1:
-                k, start = _chronological(k, np.asarray(entry["pos"]))
-                v, _ = _chronological(np.asarray(entry["v"]),
-                                      np.asarray(entry["pos"]))
-            count, s, kv_heads, hd = k.shape
-            # TP shard split (P's parallel strategy), per Fig. 4
-            shards_k = np.split(k, tp_p, axis=2)
-            shards_v = np.split(v, tp_p, axis=2)
-            payloads, scales = [], []
-            for sh in shards_k + shards_v:
-                pl, sc = precision.encode_wire(
-                    jnp.asarray(sh).reshape(-1, sh.shape[2], hd), self.wire)
-                payloads.append(pl)
-                scales.append(sc)
-            out_kv.append({"kind": "kv", "gi": gi, "pi": pi, "count": count,
-                           "seq": s, "start": start, "tp_p": tp_p,
-                           "payloads": payloads, "scales": scales})
+        out_kv = [self._encode_entry(tp_p, kind, gi, pi, ent)
+                  for kind, gi, pi, ent in
+                  kv_entries_with_start(package["kv"])]
         wire_pkg = {"kv": out_kv, "states": package["states"],
                     "cross": package["cross"]}
         meta = {"first_token": package["first_token"],
@@ -91,18 +100,29 @@ class DisaggPipeline:
                 "wire": self.wire}
         return wire_pkg, meta
 
+    def encode_chunk(self, p_engine: Engine, chunk: Dict[str, Any]
+                     ) -> Dict[str, Any]:
+        """One prefill chunk ({"kv": normalized entries}) → wire chunk."""
+        tp_p = p_engine.vendor.tp
+        return {"kv": [self._encode_entry(tp_p, kind, gi, pi, ent)
+                       for kind, gi, pi, ent in chunk["kv"]]}
+
     # ------------------------------------------------------------------ #
     # D side: wire → pools
     # ------------------------------------------------------------------ #
     def materialize(self, d_engine: Engine, slot: int, block_ids: np.ndarray,
-                    payload: Dict[str, Any], meta: Dict[str, Any]) -> None:
-        cfg = d_engine.cfg
+                    payload: Dict[str, Any], meta: Dict[str, Any], *,
+                    rmw: bool = False) -> None:
+        """Re-page wire KV entries (and any states/cross rows) into the D
+        instance's pools. ``rmw`` preserves the untouched rows of partially
+        covered blocks — required when streaming chunks whose boundaries do
+        not align with the D vendor's block size."""
         tp_d = d_engine.vendor.tp
         wire: WireFormat = meta["wire"]
         caches = [list(g) for g in d_engine.caches]
         bids = jnp.asarray(block_ids, jnp.int32)
 
-        for entry in payload["kv"]:
+        for entry in payload.get("kv", []):
             gi, pi = entry["gi"], entry["pi"]
             count, s, start = entry["count"], entry["seq"], entry["start"]
             if entry["kind"] == "mla":
@@ -120,9 +140,9 @@ class DisaggPipeline:
                 caches[gi][pi] = dict(
                     pools,
                     ckv_pool=self._write_pages(spec_c, pools["ckv_pool"],
-                                               bids, ckv, start),
+                                               bids, ckv, start, rmw=rmw),
                     kpe_pool=self._write_pages(spec_p, pools["kpe_pool"],
-                                               bids, kpe, start))
+                                               bids, kpe, start, rmw=rmw))
                 continue
             spec = d_engine.specs["kv"]
             tp_p = entry["tp_p"]
@@ -146,14 +166,16 @@ class DisaggPipeline:
             pools = caches[gi][pi]
             caches[gi][pi] = dict(
                 pools,
-                k_pool=self._write_pages(spec, pools["k_pool"], bids, k_d, start),
-                v_pool=self._write_pages(spec, pools["v_pool"], bids, v_d, start))
+                k_pool=self._write_pages(spec, pools["k_pool"], bids, k_d,
+                                         start, rmw=rmw),
+                v_pool=self._write_pages(spec, pools["v_pool"], bids, v_d,
+                                         start, rmw=rmw))
 
         # recurrent / SSM states: place rows at the slot
-        for _, gi, pi, state in payload["states"]:
+        for _, gi, pi, state in payload.get("states", []):
             caches[gi][pi] = d_engine._place_fn(caches[gi][pi], state, slot)
         # enc-dec cross attention memory
-        for gi, pi, cr in payload["cross"]:
+        for gi, pi, cr in payload.get("cross", []):
             c = dict(caches[gi][pi])
             for name in ("cross_k", "cross_v", "mem_len"):
                 c[name] = c[name].at[:, slot].set(
@@ -164,22 +186,39 @@ class DisaggPipeline:
 
     @staticmethod
     def _write_pages(spec: PC.KVPageSpec, pool: jax.Array, block_ids,
-                     canon: jax.Array, start: int) -> jax.Array:
+                     canon: jax.Array, start: int, *,
+                     rmw: bool = False) -> jax.Array:
         """canon: (count, S, kv, hd) holding absolute positions
-        [start, start+S) → scatter into pages (vmapped over layer count)."""
+        [start, start+S) → scatter into pages (vmapped over layer count).
+
+        Whole-sequence writes zero-fill block padding; ``rmw`` reads the
+        touched pages back and overlays only [start, start+S), so a later
+        chunk cannot clobber an earlier chunk sharing its first block."""
         bs = spec.block_size
         lo_block = start // bs
         front = start - lo_block * bs
-        if front:
-            canon = jnp.pad(canon, ((0, 0), (front, 0), (0, 0), (0, 0)))
-        s_tot = canon.shape[1]
+        s_tot = front + canon.shape[1]
         nb = -(-s_tot // bs)
         use = block_ids[lo_block:lo_block + nb]
-        return jax.vmap(lambda pl, cn: PC.scatter_sequence(spec, pl, use, cn)
-                        )(pool, canon)
+        if not rmw:
+            if front:
+                canon = jnp.pad(canon, ((0, 0), (front, 0), (0, 0), (0, 0)))
+            return jax.vmap(lambda pl, cn: PC.scatter_sequence(spec, pl, use, cn)
+                            )(pool, canon)
+
+        def wr(pl, cn):
+            cur = PC.pages_to_canonical(spec, pl[use])       # (nb, bs, kv, hd)
+            flat = cur.reshape(nb * bs, spec.kv_heads, spec.head_dim)
+            flat = jax.lax.dynamic_update_slice(
+                flat, cn.astype(flat.dtype), (front, 0, 0))
+            pages = PC.pages_from_canonical(
+                spec, flat.reshape(nb, bs, spec.kv_heads, spec.head_dim))
+            return pl.at[use].set(pages)
+
+        return jax.vmap(wr)(pool, canon)
 
     # ------------------------------------------------------------------ #
-    # Full handoff
+    # Monolithic handoff (baseline transmission)
     # ------------------------------------------------------------------ #
     def handoff(self, req: Request, p_engine: Engine, d_engine: Engine
                 ) -> Dict[str, Any]:
@@ -189,9 +228,7 @@ class DisaggPipeline:
         key = f"{req.req_id}@{p_engine.name}"
         nbytes = self.transfer.stage(key, wire_pkg, meta)
         payload, meta = self.transfer.read(key)
-        payload = jax.tree.map(
-            lambda x: jnp.asarray(x) if isinstance(x, np.ndarray) else x,
-            payload)
+        payload = _to_device(payload)
 
         def materialize_fn(engine, slot, bids, _pkg):
             self.materialize(engine, slot, bids, payload, meta)
@@ -202,3 +239,126 @@ class DisaggPipeline:
         self.transfer.complete(key)
         meta["bytes"] = nbytes
         return meta
+
+    # ------------------------------------------------------------------ #
+    # Streamed chunked handoff (overlapped transmission)
+    # ------------------------------------------------------------------ #
+    def begin_handoff(self, req: Request, p_engine: Engine, d_engine: Engine,
+                      seq_len: int,
+                      compute_overlapped: bool = False) -> "StreamedHandoff":
+        """Reserve the D slot/blocks and open a chunk stream for ``req``.
+
+        ``compute_overlapped``: the chunks come from an *incremental*
+        prefill, so each chunk's wire time hides under the next chunk's
+        compute (credited to TransferStats.overlap_modeled_seconds). A
+        monolithic-compute stream ships after all P compute finished —
+        nothing to hide under, no overlap credit."""
+        return StreamedHandoff(self, req, p_engine, d_engine, seq_len,
+                               compute_overlapped=compute_overlapped)
+
+    def handoff_streamed(self, req: Request, p_engine: Engine,
+                         d_engine: Engine,
+                         chunk_tokens: Optional[int] = None,
+                         chunked_compute: Optional[bool] = None
+                         ) -> Dict[str, Any]:
+        """Drive a full streamed handoff synchronously (tests / examples;
+        the global scheduler advances the same protocol tick by tick)."""
+        stream = p_engine.prefill_stream(req, chunk_tokens, chunked_compute)
+        h = self.begin_handoff(req, p_engine, d_engine, stream.seq_len,
+                               compute_overlapped=stream.chunked_compute)
+        try:
+            while True:
+                chunk = stream.next_chunk()
+                if chunk is None:
+                    break
+                h.send_chunk(chunk)
+            return h.finalize(stream.first_token, stream.tail_package())
+        except Exception:
+            h.abort()
+            raise
+
+
+class StreamedHandoff:
+    """State of one in-flight chunked P→D handoff.
+
+    Lifecycle: reserve (ctor) → ``send_chunk``×N → ``finalize`` | ``abort``.
+    Each ``send_chunk`` encodes one chunk, stages it into the pinned pool,
+    RDMA-reads it on the D side, and re-pages it immediately — in the real
+    serving loop the next chunk's compute proceeds while this happens, so
+    every chunk's modeled wire time except the last is overlap."""
+
+    def __init__(self, pipeline: DisaggPipeline, req: Request,
+                 p_engine: Engine, d_engine: Engine, seq_len: int, *,
+                 compute_overlapped: bool = False):
+        self.pipeline = pipeline
+        self.req = req
+        self.p_engine = p_engine
+        self.d_engine = d_engine
+        self.seq_len = seq_len
+        self.compute_overlapped = compute_overlapped
+        self.slot, self.block_ids = d_engine.reserve_sequence(req, seq_len)
+        self.meta = {"seq_len": seq_len, "tp_p": p_engine.vendor.tp,
+                     "wire": pipeline.wire}
+        self.chunks_sent = 0
+        self.bytes = 0
+        self._chunk_modeled: List[float] = []
+        self._chunk_compute: List[float] = []
+        self._closed = False
+
+    def send_chunk(self, chunk: Dict[str, Any]) -> int:
+        """Encode → stage → read → re-page one chunk. Returns its bytes."""
+        assert not self._closed, "send_chunk on a closed handoff"
+        if self.d_engine.failed:
+            raise RuntimeError(f"instance {self.d_engine.name} is down")
+        tr = self.pipeline.transfer
+        wire_chunk = self.pipeline.encode_chunk(self.p_engine, chunk)
+        key = f"{self.req.req_id}@{self.p_engine.name}#c{self.chunks_sent}"
+        nbytes = tr.stage(key, wire_chunk, self.meta)
+        payload, meta = tr.read(key)
+        self.pipeline.materialize(self.d_engine, self.slot, self.block_ids,
+                                  _to_device(payload), meta, rmw=True)
+        tr.complete(key)
+        tr.stats.chunks += 1
+        self._chunk_modeled.append(tr.modeled_latency(nbytes))
+        self._chunk_compute.append(chunk.get("compute_seconds", 0.0))
+        self.chunks_sent += 1
+        self.bytes += nbytes
+        return nbytes
+
+    def finalize(self, first_token: int, tail_package: Dict[str, Any]
+                 ) -> Dict[str, Any]:
+        """Ship recurrent/cross state, activate the D slot, account overlap."""
+        assert not self._closed
+        tr = self.pipeline.transfer
+        if tail_package.get("states") or tail_package.get("cross"):
+            key = f"{self.req.req_id}@{self.p_engine.name}#tail"
+            nbytes = tr.stage(key, {"states": tail_package["states"],
+                                    "cross": tail_package["cross"]},
+                              self.meta)
+            payload, meta = tr.read(key)
+            self.pipeline.materialize(self.d_engine, self.slot,
+                                      self.block_ids, _to_device(payload),
+                                      meta)
+            tr.complete(key)
+            self.bytes += nbytes
+        self.d_engine.activate_sequence(self.slot, first_token, self.seq_len)
+        # incremental compute: chunk i's wire time hides under chunk i+1's
+        # compute, but only as much of it as that compute can cover — on a
+        # wire-bound link most of the transfer stays exposed (same residue
+        # the planner's handoff_exposed_seconds models). Monolithic compute
+        # ships after all P compute: no overlap credit at all.
+        if self.compute_overlapped:
+            tr.stats.overlap_modeled_seconds += sum(
+                min(xfer, comp) for xfer, comp in
+                zip(self._chunk_modeled[:-1], self._chunk_compute[1:]))
+        self._closed = True
+        return {"first_token": first_token, "seq_len": self.seq_len,
+                "tp_p": self.meta["tp_p"], "wire": self.pipeline.wire,
+                "bytes": self.bytes, "chunks": self.chunks_sent}
+
+    def abort(self) -> None:
+        """Failure path: free the D reservation."""
+        if self._closed:
+            return
+        self._closed = True
+        self.d_engine.abort_reservation(self.slot)

@@ -21,11 +21,19 @@ import numpy as np
 class TransferStats:
     transfers: int = 0
     bytes_moved: int = 0
+    chunks: int = 0                 # streamed KV chunks (overlapped handoff)
     stage_seconds: float = 0.0      # wall time spent staging (P side)
     read_seconds: float = 0.0       # wall time spent reading (D side)
     modeled_seconds: float = 0.0    # bytes / modeled_bandwidth
+    overlap_modeled_seconds: float = 0.0  # modeled wire time hidden under
+    #                                       the next chunk's prefill compute
     peak_buffer_bytes: int = 0
     retries: int = 0
+
+    @property
+    def exposed_modeled_seconds(self) -> float:
+        """Modeled wire time left on the critical path after overlap."""
+        return self.modeled_seconds - self.overlap_modeled_seconds
 
 
 class PinnedBufferPool:

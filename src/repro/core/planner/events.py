@@ -224,7 +224,17 @@ def simulate(cfg: ModelConfig, wl: Workload, *,
                 if r.tokens_emitted >= r.output_len:
                     r.finish = now + dt
                 else:
-                    push(now + dt + xfer, "admit", (r, inst))
+                    # chunked streaming overlaps the wire with chunk compute
+                    # (serving stack's StreamedHandoff); only the exposed
+                    # residue delays admission to the D pool. Families the
+                    # engine cannot chunk-compute ship after the whole
+                    # prefill — full wire time exposed.
+                    if cfg.supports_chunked_prefill:
+                        exposed = inst.model.fw.handoff_exposed_seconds(
+                            dt, xfer, r.input_len)
+                    else:
+                        exposed = xfer
+                    push(now + dt + exposed, "admit", (r, inst))
                 push(now + dt, "work", inst)
                 continue
             if inst.role in ("decode", "both") and \

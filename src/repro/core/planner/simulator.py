@@ -209,8 +209,26 @@ class FrameworkModel:
     prefix_cache_hit: float = 0.0     # fraction of prompt FLOPs skipped
     sched_overhead_s: float = 3e-4    # per engine step (batching, host)
     kernel_launch_s: float = 6e-6     # per fused op
-    chunked_prefill: bool = False
+    chunked_prefill: bool = False     # stream KV chunk-wise during prefill
+    prefill_chunk_tokens: int = 512   # chunk size when chunked_prefill
     weight_dtype_bytes: int = 2
+
+    def handoff_exposed_seconds(self, prefill_s: float, transfer_s: float,
+                                input_len: int) -> float:
+        """P→D wire time left on the critical path after the prefill.
+
+        Monolithic transmission exposes the whole transfer. With chunked
+        streaming (the serving stack's StreamedHandoff), chunk i's wire
+        time hides under chunk i+1's compute: only the last chunk's
+        transfer — or, when the wire is the bottleneck, the un-hidden
+        residue of the pipelined stream — remains exposed."""
+        if not self.chunked_prefill or transfer_s <= 0 or prefill_s <= 0:
+            return transfer_s
+        n = max(1, math.ceil(input_len / max(self.prefill_chunk_tokens, 1)))
+        per_chunk_xfer = transfer_s / n
+        per_chunk_comp = prefill_s / n
+        return max(per_chunk_xfer,
+                   per_chunk_comp + transfer_s - prefill_s)
 
 
 # --------------------------------------------------------------------------- #

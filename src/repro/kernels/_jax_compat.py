@@ -1,0 +1,58 @@
+"""Version-compat shims for JAX symbols that moved between releases.
+
+Two symbols this repo needs have different homes across the JAX versions we
+support:
+
+  * Pallas-TPU compiler params: ``pltpu.CompilerParams`` (new) vs
+    ``pltpu.TPUCompilerParams`` (<= 0.4.x).
+  * ``shard_map``: top-level ``jax.shard_map`` (new) vs
+    ``jax.experimental.shard_map.shard_map``.
+
+Resolution happens once at import; kernels and layers import from here so
+the rest of the tree never version-checks.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+
+def _resolve_compiler_params():
+    cls = getattr(_pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = getattr(_pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        raise ImportError(
+            "no Pallas-TPU compiler-params class found (looked for "
+            "pltpu.CompilerParams and pltpu.TPUCompilerParams)")
+    return cls
+
+
+def _resolve_shard_map():
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    import inspect
+    params = inspect.signature(fn).parameters
+    has_vma = "check_vma" in params
+    has_rep = "check_rep" in params
+
+    def wrapped(f, *args, **kwargs):
+        """shard_map with the replication-check kwarg normalized: callers may
+        pass either ``check_vma`` (new) or ``check_rep`` (old); the one the
+        installed JAX understands is forwarded."""
+        check = kwargs.pop("check_vma", kwargs.pop("check_rep", None))
+        if check is not None:
+            if has_vma:
+                kwargs["check_vma"] = check
+            elif has_rep:
+                kwargs["check_rep"] = check
+        return fn(f, *args, **kwargs)
+
+    return wrapped
+
+
+CompilerParams = _resolve_compiler_params()
+shard_map = _resolve_shard_map()
+
+__all__ = ["CompilerParams", "shard_map"]

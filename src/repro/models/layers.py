@@ -717,7 +717,8 @@ def moe_mlp(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
 def _moe_mlp_shard_map(p: Params, cfg: ModelConfig, x: jax.Array,
                        dctx) -> jax.Array:
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+
+    from repro.kernels._jax_compat import shard_map
 
     M = dctx.model_axis
     dp = dctx.dp_axes if x.shape[0] % _axes_size(dctx.mesh, dctx.dp_axes) == 0 \

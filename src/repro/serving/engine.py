@@ -53,6 +53,7 @@ class VendorProfile:
 @dataclasses.dataclass
 class EngineStats:
     prefill_tokens: int = 0
+    prefill_chunks: int = 0         # compute chunks (1 per monolithic prefill)
     decode_steps: int = 0
     decode_tokens: int = 0
     prefill_seconds: float = 0.0
@@ -61,6 +62,185 @@ class EngineStats:
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
+
+
+def _chronological(arr: np.ndarray, pos: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Ring-buffer shard (count, cap, ...) + pos (count, cap) →
+    chronological (count, cap, ...) and the absolute start position."""
+    order = np.argsort(pos[0])                    # same order across layers
+    return arr[:, order], int(pos[0][order[0]])
+
+
+def kv_entries_with_start(package_kv: List[Tuple]) -> List[Tuple]:
+    """Normalize a prefill package's KV entries to chronological order with
+    an absolute ``start`` position — the canonical pre-wire form that both
+    the monolithic encoder and the chunk splitter consume.
+
+    Returns [(kind, gi, pi, entry)] where entry holds contiguous arrays of
+    shape (count, S', ...) covering absolute positions [start, start+S')."""
+    out = []
+    for kind, gi, pi, entry in package_kv:
+        if kind == "mla":
+            out.append((kind, gi, pi, {"ckv": np.asarray(entry["ckv"]),
+                                       "kpe": np.asarray(entry["kpe"]),
+                                       "start": 0}))
+            continue
+        k, v = np.asarray(entry["k"]), np.asarray(entry["v"])
+        start = 0
+        if "pos" in entry and k.shape[1] < np.max(entry["pos"]) + 1:
+            pos = np.asarray(entry["pos"])
+            k, start = _chronological(k, pos)
+            v, _ = _chronological(v, pos)
+        out.append((kind, gi, pi, {"k": k, "v": v, "start": start}))
+    return out
+
+
+def slice_kv_entries(entries: List[Tuple], w0: int, w1: int) -> List[Tuple]:
+    """Restrict normalized entries to the absolute token window [w0, w1)."""
+    out = []
+    for kind, gi, pi, ent in entries:
+        start = ent["start"]
+        arrs = {n: a for n, a in ent.items() if n != "start"}
+        length = next(iter(arrs.values())).shape[1]
+        lo = max(w0, start)
+        hi = min(w1, start + length)
+        if hi <= lo:
+            continue
+        sl = {n: a[:, lo - start:hi - start] for n, a in arrs.items()}
+        sl["start"] = lo
+        out.append((kind, gi, pi, sl))
+    return out
+
+
+class PrefillStream:
+    """Resumable chunked prefill on one P engine (paper §III-B overlap).
+
+    ``next_chunk()`` yields KV chunk packages ``{"kv": entries, "start",
+    "length"}`` until exhausted (then returns ``None``). Two compute modes:
+
+      * *incremental* — attention-only families run the prompt through the
+        decode path over a dense prompt-capacity cache, one chunk of tokens
+        per call, so each chunk's KV can hit the wire while the next chunk
+        computes (Mooncake-style layer/chunk-wise streaming).
+      * *monolithic*  — families with recurrent/SSM state, encoders, or
+        multimodal frontends compute the whole prompt in one pass on the
+        first call; the wire still streams in ``chunk_tokens`` slices.
+
+    ``first_token`` / ``tail_package()`` (states, cross-attention memory)
+    become available once the final chunk has been produced."""
+
+    def __init__(self, engine: "Engine", req: Request,
+                 chunk_tokens: Optional[int] = None,
+                 chunked_compute: Optional[bool] = None):
+        self.engine = engine
+        self.req = req
+        patches = req.patches.shape[0] if req.patches is not None else 0
+        self.seq_len = req.prompt_len + patches
+        if chunk_tokens is not None and chunk_tokens <= 0:
+            chunk_tokens = None               # 0/negative = monolithic
+        self.chunk_tokens = chunk_tokens
+        if chunked_compute is None:
+            chunked_compute = engine.supports_chunked_prefill
+        elif chunked_compute and not engine.supports_chunked_prefill:
+            raise ValueError(
+                f"{engine.cfg.name}: incremental chunked prefill is not "
+                "supported for this family (ring-buffer, recurrent/SSM, "
+                "enc-dec, or multimodal prefix)")
+        self.chunked_compute = (chunked_compute
+                                and chunk_tokens is not None
+                                and chunk_tokens < self.seq_len)
+        self.first_token: Optional[int] = None
+        self.chunks_emitted = 0
+        self._next_start = 0
+        self._tail: Optional[Dict[str, Any]] = None
+        self._entries: Optional[List[Tuple]] = None   # monolithic mode
+        self._caches = None                           # incremental mode
+
+    @property
+    def done(self) -> bool:
+        return self._next_start >= self.seq_len and self.chunks_emitted > 0
+
+    def tail_package(self) -> Dict[str, Any]:
+        assert self.done, "tail_package before stream exhausted"
+        return self._tail if self._tail is not None \
+            else {"states": [], "cross": []}
+
+    def next_chunk(self) -> Optional[Dict[str, Any]]:
+        if self.done:
+            return None
+        if self.chunked_compute:
+            chunk = self._next_incremental()
+        else:
+            chunk = self._next_monolithic()
+        self.chunks_emitted += 1
+        return chunk
+
+    # -- monolithic compute, chunked wire ------------------------------- #
+    def _next_monolithic(self) -> Dict[str, Any]:
+        if self._entries is None:
+            package = self.engine.prefill(self.req)
+            self.first_token = package["first_token"]
+            self._tail = {"states": package["states"],
+                          "cross": package["cross"]}
+            self._entries = kv_entries_with_start(package["kv"])
+            if self._entries:
+                # ring-buffer (sliding) entries only cover the last window
+                # of the prompt — don't ship empty chunks for the evicted
+                # prefix, start streaming at the first position on the wire
+                self._next_start = min(
+                    min(e[3]["start"] for e in self._entries), self.seq_len)
+        w0 = self._next_start
+        if not self._entries or self.chunk_tokens is None:
+            w1 = self.seq_len        # states-only: nothing to chunk
+        else:
+            w1 = min(w0 + self.chunk_tokens, self.seq_len)
+        self._next_start = w1
+        return {"kv": slice_kv_entries(self._entries, w0, w1),
+                "start": w0, "length": w1 - w0, "compute_seconds": 0.0}
+
+    # -- incremental compute (attention-only families) ------------------- #
+    def _next_incremental(self) -> Dict[str, Any]:
+        eng, cfg, req = self.engine, self.engine.cfg, self.req
+        if eng.failed:
+            raise RuntimeError(f"instance {eng.name} is down")
+        t0 = time.perf_counter()
+        if self._caches is None:
+            # capacity rounded to a chunk multiple: prompts within the same
+            # chunk bucket share one compiled cache shape (_chunk_fn traces
+            # per (cache capacity, chunk length)); entries past seq_len stay
+            # pos=-1 and are masked
+            cap = -(-self.seq_len // self.chunk_tokens) * self.chunk_tokens
+            self._caches = M.init_caches(cfg, 1, cap, cfg.cdtype)
+        c0 = self._next_start
+        c1 = min(c0 + self.chunk_tokens, self.seq_len)
+        tokens = jnp.asarray(req.prompt[c0:c1], jnp.int32)[None]
+        positions = jnp.arange(c0, c1, dtype=jnp.int32)[None]
+        logits, self._caches = eng._chunk_fn(eng.params, tokens, positions,
+                                             self._caches)
+        if c1 == self.seq_len:
+            self.first_token = int(
+                eng._sample(np.asarray(logits[:, -1]), req)[0])
+        entries = []
+        for gi, g in enumerate(M.block_groups(cfg)):
+            for pi, _kind in enumerate(g.kinds):
+                c = self._caches[gi][pi]
+                if cfg.attention_kind == "mla":
+                    entries.append(("mla", gi, pi, {
+                        "ckv": np.asarray(c.ckv[:, 0, c0:c1]),
+                        "kpe": np.asarray(c.kpe[:, 0, c0:c1]),
+                        "start": c0}))
+                else:
+                    entries.append(("kv", gi, pi, {
+                        "k": np.asarray(c.k[:, 0, c0:c1]),
+                        "v": np.asarray(c.v[:, 0, c0:c1]),
+                        "start": c0}))
+        self._next_start = c1
+        dt = time.perf_counter() - t0
+        eng.stats.prefill_tokens += c1 - c0
+        eng.stats.prefill_chunks += 1
+        eng.stats.prefill_seconds += dt
+        return {"kv": entries, "start": c0, "length": c1 - c0,
+                "compute_seconds": dt}
 
 
 class Engine:
@@ -89,6 +269,9 @@ class Engine:
                                           batch=max_batch, mem_len=self.mem_len)
         # slot bookkeeping (host side)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
+        # a slot is reserved when slot_req is set; ready once its KV has
+        # fully landed (streamed chunks materialized + first token known)
+        self.slot_ready: List[bool] = [False] * max_batch
         self.block_tables = np.full((max_batch, self.max_blocks_per_seq),
                                     self._scratch_block, np.int32)
         self.seq_lens = np.zeros((max_batch,), np.int32)
@@ -121,9 +304,29 @@ class Engine:
                 return c.at[:, slot].set(u.astype(c.dtype))
             return jax.tree.map(upd, caches, updates)
 
+        @jax.jit
+        def _prefill_chunk(params, tokens, positions, caches):
+            """One chunk of incremental prefill: the decode path over a
+            dense prompt-capacity cache (retraced per distinct chunk len)."""
+            return M.decode_step(params, cfg, tokens, positions, caches)
+
         self._prefill_fn = _prefill
         self._decode_fn = _decode
+        self._chunk_fn = _prefill_chunk
         self._place_fn = jax.jit(_place, donate_argnums=(0,))
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Incremental chunk compute is a model-structure property — see
+        ModelConfig.supports_chunked_prefill."""
+        return self.cfg.supports_chunked_prefill
+
+    def prefill_stream(self, req: Request,
+                       chunk_tokens: Optional[int] = None,
+                       chunked_compute: Optional[bool] = None
+                       ) -> PrefillStream:
+        """Start a resumable (chunked) prefill for ``req``."""
+        return PrefillStream(self, req, chunk_tokens, chunked_compute)
 
     # ------------------------------------------------------------------ #
     # Prefill (P role)
@@ -152,6 +355,7 @@ class Engine:
         package["first_token"] = int(first_token)
         package["seq_len"] = plen
         self.stats.prefill_tokens += plen
+        self.stats.prefill_chunks += 1
         self.stats.prefill_seconds += time.perf_counter() - t0
         return package
 
@@ -204,25 +408,55 @@ class Engine:
                 and self.allocator.can_allocate(need)
                 and seq_len + new_tokens <= self.max_seq_len)
 
-    def add_sequence(self, req: Request, package: Dict[str, Any],
-                     materialize_fn) -> int:
-        """Admit a transferred request into a decode slot.
+    def reserve_sequence(self, req: Request, seq_len: int
+                         ) -> Tuple[int, np.ndarray]:
+        """Claim a decode slot + paged blocks for an in-flight handoff.
 
-        ``materialize_fn(engine, slot, block_ids, package)`` is provided by
-        the disagg orchestrator (it owns the compat conversion)."""
+        The slot is occupied (counts toward load, not free) but NOT decoded
+        until ``activate_sequence`` — streamed KV chunks land in between."""
         if self.failed:
             raise RuntimeError(f"instance {self.name} is down")
         slot = self.free_slots()[0]
-        seq_len = package["seq_len"]
         nblocks = -(-(seq_len + req.max_new_tokens) // self.block_size)
         nblocks = min(nblocks, self.max_blocks_per_seq)
         block_ids = self.allocator.allocate(req.req_id, nblocks)
         self.block_tables[slot, :] = self._scratch_block
         self.block_tables[slot, :nblocks] = block_ids
-        self.seq_lens[slot] = seq_len
-        self.last_token[slot] = package["first_token"]
+        self.seq_lens[slot] = 0
         self.slot_req[slot] = req
-        materialize_fn(self, slot, np.asarray(block_ids, np.int32), package)
+        self.slot_ready[slot] = False
+        return slot, np.asarray(block_ids, np.int32)
+
+    def activate_sequence(self, slot: int, first_token: int,
+                          seq_len: int) -> None:
+        """All KV landed — the slot joins continuous batching next step."""
+        self.seq_lens[slot] = seq_len
+        self.last_token[slot] = first_token
+        self.slot_ready[slot] = True
+
+    def abort_reservation(self, slot: int) -> None:
+        """Handoff failed mid-stream: free the slot and its blocks."""
+        if self.failed:
+            # node is down: recover() rebuilds the allocator and pools, but
+            # the slot must drop its request NOW so the failure sweep does
+            # not requeue it a second time (two parallel lives)
+            self.slot_req[slot] = None
+            self.slot_ready[slot] = False
+            return
+        self.release(slot)
+
+    def add_sequence(self, req: Request, package: Dict[str, Any],
+                     materialize_fn) -> int:
+        """Admit a fully-transferred request into a decode slot.
+
+        ``materialize_fn(engine, slot, block_ids, package)`` is provided by
+        the disagg orchestrator (it owns the compat conversion)."""
+        if self.failed:
+            raise RuntimeError(f"instance {self.name} is down")
+        seq_len = package["seq_len"]
+        slot, block_ids = self.reserve_sequence(req, seq_len)
+        materialize_fn(self, slot, block_ids, package)
+        self.activate_sequence(slot, package["first_token"], seq_len)
         return slot
 
     def release(self, slot: int) -> None:
@@ -230,6 +464,7 @@ class Engine:
         if req is not None:
             self.allocator.free(req.req_id)
         self.slot_req[slot] = None
+        self.slot_ready[slot] = False
         self.seq_lens[slot] = 0
         self.block_tables[slot, :] = self._scratch_block
 
@@ -237,7 +472,8 @@ class Engine:
         """One continuous-batching step. Returns [(slot, request, token)]."""
         if self.failed:
             raise RuntimeError(f"instance {self.name} is down")
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        active = [i for i, r in enumerate(self.slot_req)
+                  if r is not None and self.slot_ready[i]]
         if not active:
             return []
         t0 = time.perf_counter()
@@ -246,7 +482,8 @@ class Engine:
         write_blocks = self.block_tables[np.arange(self.max_batch),
                                          np.minimum(write_block_idx,
                                                     self.max_blocks_per_seq - 1)]
-        idle = np.asarray([r is None for r in self.slot_req])
+        idle = np.asarray([r is None or not self.slot_ready[i]
+                           for i, r in enumerate(self.slot_req)])
         write_blocks = np.where(idle, self._scratch_block, write_blocks)
         logits, self.caches = self._decode_fn(
             self.params, jnp.asarray(self.last_token[:, None]),

@@ -37,6 +37,7 @@ class Request:
     finish_time: Optional[float] = None
     retries: int = 0
     decode_steps_at_dispatch: int = 0
+    chunks_streamed: int = 0                # KV chunks shipped P→D
 
     @property
     def prompt_len(self) -> int:

@@ -15,7 +15,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -32,22 +32,58 @@ class SchedulerStats:
     finished: int = 0
     failed: int = 0
     requeues: int = 0
+    chunks_streamed: int = 0
     p_dispatches: Dict[str, int] = dataclasses.field(
         default_factory=lambda: collections.defaultdict(int))
     d_dispatches: Dict[str, int] = dataclasses.field(
         default_factory=lambda: collections.defaultdict(int))
 
 
+# failures that void a dispatch/flight and requeue the request: a dead
+# engine (RuntimeError) or pinned-pool exhaustion (MemoryError from stage).
+# Requeues are capped by max_retries so a permanent failure surfaces as a
+# FAILED request instead of an infinite dispatch loop.
+_DISPATCH_ERRORS = (RuntimeError, MemoryError)
+
+
+@dataclasses.dataclass
+class _Flight:
+    """One in-flight chunked prefill+handoff: occupies a P instance and a
+    reserved D slot across scheduler ticks."""
+    req: Request
+    p: Engine
+    d: Engine
+    stream: Any                     # serving.engine.PrefillStream
+    handoff: Any                    # core.disagg.StreamedHandoff
+
+
 class GlobalScheduler:
     def __init__(self, pipeline: "DisaggPipeline",
                  clock: Callable[[], float] = time.monotonic,
-                 straggler_factor: float = 8.0):
+                 straggler_factor: float = 8.0,
+                 prefill_chunk: Optional[int] = None,
+                 chunk_budget: int = 1,
+                 max_retries: int = 8):
+        """``prefill_chunk``: tokens per streamed prefill chunk. ``None``
+        keeps the monolithic single-tick handoff; set it to stream long
+        prefills across ticks (``chunk_budget`` chunks per flight per tick)
+        so decode steps interleave with a long prompt's prefill.
+
+        ``max_retries``: dispatch/flight failures requeue the request up to
+        this many times, then mark it FAILED (permanent failures must not
+        spin the dispatch loop forever)."""
         self.pipeline = pipeline
         self.clock = clock
         self.straggler_factor = straggler_factor
+        self.max_retries = max_retries
+        # 0/negative = monolithic, same as None
+        self.prefill_chunk = prefill_chunk \
+            if prefill_chunk is not None and prefill_chunk > 0 else None
+        self.chunk_budget = max(chunk_budget, 1)
         self.p_pool: Dict[str, Engine] = {}
         self.d_pool: Dict[str, Engine] = {}
         self.pending: collections.deque[Request] = collections.deque()
+        self.inflight: List[_Flight] = []
         self.finished: List[Request] = []
         self.stats = SchedulerStats()
         self._ema: Dict[str, float] = {}          # decode step latency EMA
@@ -77,8 +113,9 @@ class GlobalScheduler:
         straggler = base / med if med > 0 else 1.0
         return e.load() + max(straggler - 1.0, 0.0)
 
-    def _pick_p(self) -> Optional[Engine]:
-        cands = self._routable(self.p_pool)
+    def _pick_p(self, busy: Optional[set] = None) -> Optional[Engine]:
+        cands = [e for e in self._routable(self.p_pool)
+                 if not busy or e.name not in busy]
         return min(cands, key=self._penalty) if cands else None
 
     def _pick_d(self, req: Request, seq_len: int) -> Optional[Engine]:
@@ -98,6 +135,10 @@ class GlobalScheduler:
         tokens (and ``max_new_tokens`` stays put, so ``done`` still fires at
         the original budget); the re-prefill's first token is the
         continuation after the prefix."""
+        if req.retries >= self.max_retries:
+            req.state = State.FAILED
+            self.stats.failed += 1
+            return
         if req.output_tokens:
             req.prompt = np.concatenate(
                 [req.prompt, np.asarray(req.output_tokens, req.prompt.dtype)])
@@ -107,54 +148,127 @@ class GlobalScheduler:
         self.pending.appendleft(req)
 
     def _handle_failures(self) -> None:
+        # flights first: a failed P or D voids the stream — drop the D
+        # reservation and requeue from scratch
+        for fl in list(self.inflight):
+            if fl.p.failed or fl.d.failed:
+                self._abort_flight(fl)
+        inflight_reqs = {id(fl.req) for fl in self.inflight}
         for e in list(self.d_pool.values()):
             if e.failed:
                 for slot, req in enumerate(e.slot_req):
-                    if req is not None:
+                    if req is not None and id(req) not in inflight_reqs:
                         e.slot_req[slot] = None      # KV is gone with the node
                         self._requeue(req, e)
                 e.recover()
+
+    def _abort_flight(self, fl: _Flight) -> None:
+        fl.handoff.abort()
+        self.inflight.remove(fl)
+        self._requeue(fl.req, fl.p)
+
+    def _advance_flight(self, fl: _Flight, budget: Optional[int]
+                        ) -> Optional[int]:
+        """Stream up to ``budget`` chunks (None = to completion). Returns
+        the first token when the flight finalizes, else None."""
+        sent = 0
+        while budget is None or sent < budget:
+            chunk = fl.stream.next_chunk()
+            if chunk is None:
+                break
+            fl.handoff.send_chunk(chunk)
+            fl.req.chunks_streamed += 1
+            self.stats.chunks_streamed += 1
+            sent += 1
+        if not fl.stream.done:
+            return None
+        meta = fl.handoff.finalize(fl.stream.first_token,
+                                   fl.stream.tail_package())
+        return meta["first_token"]
+
+    def _complete_flight(self, fl: _Flight, first_token: int,
+                         emitted: List[Tuple[Request, int]]) -> None:
+        self.inflight.remove(fl)
+        self._emit_first_token(fl.req, fl.p, fl.d, first_token, emitted)
+
+    def _emit_first_token(self, req: Request, p_eng: Engine, d_eng: Engine,
+                          first_token: int,
+                          emitted: List[Tuple[Request, int]]) -> None:
+        """Handoff succeeded: the prefill's token starts the stream."""
+        self.stats.p_dispatches[p_eng.name] += 1
+        self.stats.d_dispatches[d_eng.name] += 1
+        req.state = State.DECODING
+        req.output_tokens.append(first_token)
+        if req.first_token_time is None:
+            req.first_token_time = self.clock()
+        emitted.append((req, first_token))
+        req.decode_steps_at_dispatch = 0
+        if req.done:
+            self._finish(req, d_eng)
 
     def step(self) -> List[Tuple[Request, int]]:
         """One scheduler tick. Returns emitted (request, token) pairs."""
         self._handle_failures()
         emitted: List[Tuple[Request, int]] = []
 
-        # 1. dispatch pending requests: prefill on P, handoff to D
+        # 1. dispatch pending requests: start a prefill flight on a free P
+        #    with a reserved slot on a D. Monolithic mode (prefill_chunk
+        #    None) drives the flight to completion inside this tick; chunked
+        #    mode leaves it in flight so the tick stays short.
+        busy_p = {fl.p.name for fl in self.inflight}
         still_pending: collections.deque = collections.deque()
         while self.pending:
             req = self.pending.popleft()
-            p_eng = self._pick_p()
+            p_eng = self._pick_p(busy_p)
             patches = req.patches.shape[0] if req.patches is not None else 0
             d_eng = self._pick_d(req, req.prompt_len + patches)
             if p_eng is None or d_eng is None:
                 still_pending.append(req)
                 continue
+            req.state = State.PREFILLING
+            req.prefill_instance = p_eng.name
+            req.decode_instance = d_eng.name
+            if self.prefill_chunk is None:
+                # monolithic: whole prefill + single-payload handoff in-tick
+                try:
+                    meta = self.pipeline.handoff(req, p_eng, d_eng)
+                except _DISPATCH_ERRORS:
+                    self._requeue(req, p_eng)
+                    continue
+                self._emit_first_token(req, p_eng, d_eng,
+                                       meta["first_token"], emitted)
+                continue
             try:
-                req.state = State.PREFILLING
-                req.prefill_instance = p_eng.name
-                req.decode_instance = d_eng.name
-                meta = self.pipeline.handoff(req, p_eng, d_eng)
-            except RuntimeError:
+                stream = p_eng.prefill_stream(req, self.prefill_chunk)
+                handoff = self.pipeline.begin_handoff(
+                    req, p_eng, d_eng, stream.seq_len,
+                    compute_overlapped=stream.chunked_compute)
+            except _DISPATCH_ERRORS:
                 self._requeue(req, p_eng)
                 continue
-            self.stats.p_dispatches[p_eng.name] += 1
-            self.stats.d_dispatches[d_eng.name] += 1
-            req.state = State.DECODING
-            req.output_tokens.append(meta["first_token"])
-            if req.first_token_time is None:
-                req.first_token_time = self.clock()
-            emitted.append((req, meta["first_token"]))
-            req.decode_steps_at_dispatch = 0
-            if req.done:
-                self._finish(req, d_eng)
+            self.inflight.append(_Flight(req, p_eng, d_eng, stream, handoff))
+            busy_p.add(p_eng.name)
         self.pending = still_pending
+
+        # 1b. advance in-flight chunked prefills by the per-tick budget;
+        #     each chunk's wire transfer overlaps the next chunk's compute
+        for fl in list(self.inflight):
+            try:
+                tok = self._advance_flight(fl, self.chunk_budget)
+            except _DISPATCH_ERRORS:
+                self._abort_flight(fl)
+                continue
+            if tok is not None:
+                self._complete_flight(fl, tok, emitted)
 
         # 2. one decode step on every D engine
         for e in self._routable(self.d_pool) + \
                 [self.d_pool[n] for n in list(self._draining)
                  if n in self.d_pool and not self.d_pool[n].failed]:
-            active = any(r is not None for r in e.slot_req)
+            # reserved-but-not-ready flight slots don't decode — timing a
+            # no-op step would pollute the straggler-latency EMA
+            active = any(r is not None and e.slot_ready[i]
+                         for i, r in enumerate(e.slot_req))
             if not active:
                 continue
             t0 = time.perf_counter()
@@ -188,11 +302,12 @@ class GlobalScheduler:
 
     def run(self, requests: List[Request], max_ticks: int = 10_000
             ) -> List[Request]:
-        """Drive to completion (synchronous loop)."""
+        """Drive to completion (synchronous loop). Terminates when every
+        request reached a terminal state (FINISHED or FAILED)."""
         for r in requests:
             self.submit(r)
         for _ in range(max_ticks):
-            if self.stats.finished >= len(requests):
+            if self.stats.finished + self.stats.failed >= len(requests):
                 break
             self.step()
         return self.finished

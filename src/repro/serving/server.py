@@ -64,7 +64,8 @@ class Server:
             self.submit(r)
         done_target = len(requests)
         for _ in range(max_ticks):
-            if self.scheduler.stats.finished >= done_target:
+            stats = self.scheduler.stats
+            if stats.finished + stats.failed >= done_target:
                 break
             for req, tok in self.scheduler.step():
                 self._streams.setdefault(req.req_id, []).append(tok)

@@ -1,0 +1,379 @@
+"""Chunked streamed P→D handoff (paper §III-B overlap).
+
+Three layers of guarantees:
+
+  1. *wire*: streaming a prefill package chunk-by-chunk (including chunk
+     boundaries that straddle D-vendor block boundaries → read-modify-write
+     re-paging) lands **bit-identical** D pools vs the monolithic wire, for
+     raw/bf16/int8 formats.
+  2. *compute*: incremental chunked prefill is token-exact vs monolithic
+     prefill through the full serving stack.
+  3. *scheduling*: with streaming enabled, a long prefill no longer blocks
+     the tick — decode tokens are emitted while it is in flight.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.compat.precision import WireFormat
+from repro.core.disagg import DisaggPipeline
+from repro.core.kv_transfer import TransferEngine
+from repro.models import model as M
+from repro.serving.engine import Engine, VendorProfile
+from repro.serving.request import Request, State
+from repro.serving.scheduler import GlobalScheduler
+from tests.conftest import TINY_FAMILIES
+
+WIRES = [WireFormat("raw", "float32"), WireFormat("raw", "bfloat16"),
+         WireFormat("int8")]
+
+
+def _req(cfg, plen, rid="r0", max_new=6, seed=3):
+    rng = np.random.default_rng(seed)
+    r = Request(req_id=rid,
+                prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                max_new_tokens=max_new)
+    if cfg.is_enc_dec:
+        r.frames = rng.normal(size=(10, cfg.d_model)).astype(np.float32)
+    if cfg.frontend.kind == "vision":
+        r.patches = rng.normal(size=(cfg.frontend.num_patches,
+                                     cfg.d_model)).astype(np.float32)
+    return r
+
+
+def _pair(cfg, params, vd, mem_len=0):
+    vp = VendorProfile("B", block_size=8, layout="nhbd",
+                       kv_dtype="float32", tp=2)
+    p = Engine("P0", cfg, params, vp, num_blocks=64, max_batch=4,
+               max_seq_len=64, mem_len=mem_len, role="prefill")
+    d = Engine("D0", cfg, params, vd, num_blocks=64, max_batch=4,
+               max_seq_len=64, mem_len=mem_len, role="decode")
+    return p, d
+
+
+# --------------------------------------------------------------------- #
+# 1. wire: bit-for-bit streamed == monolithic
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("family", ["dense", "mla"])
+@pytest.mark.parametrize("wire", WIRES, ids=lambda w: f"{w.kind}-{w.dtype}")
+def test_streamed_handoff_bitwise_equals_monolithic(family, wire):
+    """Same prefill package, shipped monolithically vs streamed in chunks
+    whose boundaries straddle the D vendor's 4-token blocks: every D-side
+    pool array must match bit for bit, as must the first token and the
+    first decode step."""
+    cfg = TINY_FAMILIES[family]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    req = _req(cfg, plen=13)
+
+    p1, d_mono = _pair(cfg, params, vd)
+    pipe1 = DisaggPipeline(TransferEngine(), wire)
+    pipe1.handoff(req, p1, d_mono)
+
+    p2, d_stream = _pair(cfg, params, vd)
+    pipe2 = DisaggPipeline(TransferEngine(), wire)
+    # chunk 5 is coprime with both P(8) and D(4) block sizes → RMW path
+    meta = pipe2.handoff_streamed(req, p2, d_stream, chunk_tokens=5,
+                                  chunked_compute=False)
+    assert meta["chunks"] == 3                      # ceil(13 / 5)
+    assert pipe2.transfer.stats.chunks == 3
+    assert meta["first_token"] == int(d_mono.last_token[0])
+
+    for a, b in zip(jax.tree.leaves(d_mono.caches),
+                    jax.tree.leaves(d_stream.caches)):
+        assert a.dtype == b.dtype
+        assert bool(jax.numpy.array_equal(a, b)), family
+    np.testing.assert_array_equal(d_mono.block_tables, d_stream.block_tables)
+    np.testing.assert_array_equal(d_mono.seq_lens, d_stream.seq_lens)
+
+    tok_mono = d_mono.decode_step()[0][2]
+    tok_stream = d_stream.decode_step()[0][2]
+    assert tok_mono == tok_stream
+
+
+def test_streamed_total_bytes_match_monolithic():
+    """Chunk splitting must not change what crosses the wire: per-token
+    encodings mean the summed chunk bytes equal the monolithic payload."""
+    cfg = TINY_FAMILIES["dense"]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    req = _req(cfg, plen=13)
+
+    p1, d1 = _pair(cfg, params, vd)
+    pipe1 = DisaggPipeline(TransferEngine(), WireFormat("int8"))
+    meta1 = pipe1.handoff(req, p1, d1)
+
+    p2, d2 = _pair(cfg, params, vd)
+    pipe2 = DisaggPipeline(TransferEngine(), WireFormat("int8"))
+    meta2 = pipe2.handoff_streamed(req, p2, d2, chunk_tokens=5,
+                                   chunked_compute=False)
+    assert meta2["bytes"] == meta1["bytes"]
+    # monolithic compute: chunks ship after all P compute, so none of the
+    # wire time is hidden — no overlap credit
+    st = pipe2.transfer.stats
+    assert st.chunks == 3
+    assert st.overlap_modeled_seconds == 0
+    assert st.exposed_modeled_seconds == st.modeled_seconds
+
+
+def test_no_empty_chunks_for_ring_or_states_families():
+    """Sliding-window entries only cover the last `window` tokens — the
+    stream must fast-forward past the evicted prefix instead of shipping
+    empty chunks; states-only (SSM) families ship one chunk total."""
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+
+    cfg = TINY_FAMILIES["sliding"]            # window 8
+    params = M.init_params(jax.random.key(1), cfg)
+    p, d = _pair(cfg, params, vd)
+    pipe = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
+    meta = pipe.handoff_streamed(_req(cfg, plen=21), p, d, chunk_tokens=4)
+    # ring keeps [13, 21): two 4-token chunks, zero empty ones
+    assert meta["chunks"] == 2
+
+    cfg = TINY_FAMILIES["ssm"]
+    params = M.init_params(jax.random.key(1), cfg)
+    p, d = _pair(cfg, params, vd)
+    pipe = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
+    meta = pipe.handoff_streamed(_req(cfg, plen=21), p, d, chunk_tokens=4)
+    assert meta["chunks"] == 1                # no KV to stream chunk-wise
+
+
+def test_explicit_chunked_compute_on_unsupported_family_fails_fast():
+    """Forcing chunked_compute=True on a ring-buffer family would silently
+    materialize missing KV — must raise instead."""
+    cfg = TINY_FAMILIES["sliding"]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    p, _ = _pair(cfg, params, vd)
+    with pytest.raises(ValueError, match="not.*supported"):
+        p.prefill_stream(_req(cfg, plen=21), chunk_tokens=4,
+                         chunked_compute=True)
+
+
+def test_flight_aborts_on_pinned_pool_exhaustion():
+    """A pinned pool too small for one chunk must abort the flight (slot
+    and blocks released), not leak the reservation out of step()."""
+    cfg = TINY_FAMILIES["dense"]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    p, d = _pair(cfg, params, vd)
+    pipe = DisaggPipeline(TransferEngine(buffer_capacity_bytes=64),
+                          WireFormat("raw", "float32"))
+    sched = GlobalScheduler(pipe, prefill_chunk=4)
+    sched.add_instance(p)
+    sched.add_instance(d)
+    sched.submit(_req(cfg, plen=16, rid="big", max_new=2))
+    for _ in range(3):
+        sched.step()                   # dispatch + failed chunk → requeue
+    assert sched.stats.requeues >= 1
+    assert not sched.inflight
+    assert all(r is None for r in d.slot_req)      # reservation released
+    assert d.allocator.free_blocks == d.allocator.num_blocks - 1
+
+
+def test_permanent_failure_marks_request_failed():
+    """A payload that can never fit the pinned pool must not spin the
+    dispatch loop forever — after max_retries it is marked FAILED."""
+    cfg = TINY_FAMILIES["dense"]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    p, d = _pair(cfg, params, vd)
+    pipe = DisaggPipeline(TransferEngine(buffer_capacity_bytes=64),
+                          WireFormat("raw", "float32"))
+    sched = GlobalScheduler(pipe, prefill_chunk=4, max_retries=3)
+    sched.add_instance(p)
+    sched.add_instance(d)
+    req = _req(cfg, plen=16, rid="big", max_new=2)
+    sched.submit(req)
+    for _ in range(10):
+        sched.step()
+    assert req.state == State.FAILED
+    assert sched.stats.failed == 1
+    assert req.retries == 3
+    assert not sched.pending and not sched.inflight
+    assert all(r is None for r in d.slot_req)
+
+
+def test_supports_chunked_prefill_matrix():
+    """The chunkability predicate is shared by the engine and the planner's
+    overlap gate — pin down which families incrementally compute."""
+    expect = {"dense": True, "dense-bias-qknorm": True, "moe": True,
+              "mla": True, "sliding": False, "hybrid": False, "ssm": False,
+              "encdec": False, "vlm": False}
+    for fam, want in expect.items():
+        assert TINY_FAMILIES[fam].supports_chunked_prefill == want, fam
+
+
+def test_zero_chunk_tokens_means_monolithic():
+    """chunk_tokens=0 must not livelock: it degrades to the monolithic
+    single-chunk stream, and a scheduler with prefill_chunk=0 takes the
+    legacy single-tick path."""
+    cfg = TINY_FAMILIES["dense"]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    req = _req(cfg, plen=13)
+    p, d = _pair(cfg, params, vd)
+    pipe = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
+    meta = pipe.handoff_streamed(req, p, d, chunk_tokens=0)
+    assert meta["chunks"] == 1
+    assert GlobalScheduler(pipe, prefill_chunk=0).prefill_chunk is None
+
+
+# --------------------------------------------------------------------- #
+# 2. compute: incremental chunked prefill is token-exact end to end
+# --------------------------------------------------------------------- #
+def _serve_tokens(cfg, params, vd, prefill_chunk, mem_len=0, n=3,
+                  plens=(21, 9, 14)):
+    p, d = _pair(cfg, params, vd, mem_len=mem_len)
+    pipe = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
+    sched = GlobalScheduler(pipe, prefill_chunk=prefill_chunk)
+    sched.add_instance(p)
+    sched.add_instance(d)
+    reqs = [_req(cfg, plen=plens[i], rid=f"q{i}", seed=i) for i in range(n)]
+    done = sched.run(reqs, max_ticks=500)
+    assert len(done) == n
+    return {r.req_id: list(r.output_tokens) for r in reqs}, sched, p
+
+
+@pytest.mark.parametrize("family", ["dense", "mla", "moe", "sliding",
+                                    "hybrid"])
+def test_chunked_streaming_token_exact_vs_monolithic(family):
+    """Full serving stack with prefill_chunk=4 (incremental compute where
+    the family supports it, chunked wire everywhere) must emit exactly the
+    tokens of the monolithic scheduler."""
+    cfg = TINY_FAMILIES[family]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    out_mono, _, _ = _serve_tokens(cfg, params, vd, prefill_chunk=None)
+    out_chunk, sched, p = _serve_tokens(cfg, params, vd, prefill_chunk=4)
+    assert out_chunk == out_mono
+    assert sched.stats.chunks_streamed >= 3          # actually streamed
+    if p.supports_chunked_prefill:
+        assert p.stats.prefill_chunks > 3            # incremental compute
+        # wire time of non-final chunks hid under the next chunk's compute
+        st = sched.pipeline.transfer.stats
+        assert 0 < st.overlap_modeled_seconds < st.modeled_seconds
+
+
+# --------------------------------------------------------------------- #
+# 3. scheduling: decode proceeds while a long prefill is in flight
+# --------------------------------------------------------------------- #
+def test_decode_tokens_emitted_during_long_prefill():
+    cfg = TINY_FAMILIES["dense"]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    vp = VendorProfile("B", block_size=8, layout="nhbd",
+                       kv_dtype="float32", tp=2)
+    p0 = Engine("P0", cfg, params, vp, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="prefill")
+    p1 = Engine("P1", cfg, params, vp, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="prefill")
+    d = Engine("D0", cfg, params, vd, num_blocks=64, max_batch=4,
+               max_seq_len=64, role="decode")
+    pipe = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
+    sched = GlobalScheduler(pipe, prefill_chunk=4, chunk_budget=1)
+    for e in (p0, p1, d):
+        sched.add_instance(e)
+
+    long_req = _req(cfg, plen=40, rid="long", max_new=4, seed=11)
+    short_req = _req(cfg, plen=8, rid="short", max_new=8, seed=12)
+    sched.submit(long_req)
+    sched.submit(short_req)
+
+    short_while_long_prefilling = 0
+    long_first_tick = None
+    for tick in range(1, 60):
+        emitted = sched.step()
+        for r, _tok in emitted:
+            if r is short_req and long_req.state == State.PREFILLING:
+                short_while_long_prefilling += 1
+            if r is long_req and long_first_tick is None:
+                long_first_tick = tick
+        if sched.stats.finished == 2:
+            break
+
+    # the long prompt needed ceil(40/4) = 10 single-chunk ticks
+    assert long_first_tick is not None and long_first_tick >= 10
+    assert long_req.chunks_streamed == 10
+    # decode made real progress during that window — no P/D interference
+    assert short_while_long_prefilling >= 4
+    assert len(long_req.output_tokens) == 4
+    assert len(short_req.output_tokens) == 8
+    # each flight occupied its own P instance across ticks
+    assert sched.stats.p_dispatches["P0"] + sched.stats.p_dispatches["P1"] == 2
+
+
+def test_flight_aborts_and_requeues_on_p_failure():
+    """Kill the P instance mid-stream: the D reservation must be released
+    and the request re-dispatched to a healthy P, still finishing exactly."""
+    cfg = TINY_FAMILIES["dense"]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    vp = VendorProfile("B", block_size=8, layout="nhbd",
+                       kv_dtype="float32", tp=2)
+    p0 = Engine("P0", cfg, params, vp, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="prefill")
+    p1 = Engine("P1", cfg, params, vp, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="prefill")
+    d = Engine("D0", cfg, params, vd, num_blocks=64, max_batch=4,
+               max_seq_len=64, role="decode")
+    pipe = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
+    sched = GlobalScheduler(pipe, prefill_chunk=4, chunk_budget=1)
+    for e in (p0, p1, d):
+        sched.add_instance(e)
+
+    req = _req(cfg, plen=32, rid="rq", max_new=4, seed=5)
+    sched.submit(req)
+    sched.step()
+    sched.step()                       # a couple of chunks in flight on P0/P1
+    victim = sched.inflight[0].p
+    victim.fail()
+    for _ in range(80):
+        if sched.stats.finished == 1:
+            break
+        sched.step()
+    assert sched.stats.finished == 1
+    assert sched.stats.requeues >= 1
+    assert len(req.output_tokens) == 4
+    # reservation was not leaked: every D slot is free again
+    assert all(r is None for r in d.slot_req)
+    assert d.allocator.free_blocks == d.allocator.num_blocks - 1  # scratch
+
+
+def test_flight_requeues_once_on_d_failure():
+    """Kill the D instance mid-stream: the request must be requeued exactly
+    once (a stale slot entry must not resurrect it a second time) and
+    finish with exactly max_new_tokens."""
+    cfg = TINY_FAMILIES["dense"]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    vp = VendorProfile("B", block_size=8, layout="nhbd",
+                       kv_dtype="float32", tp=2)
+    p = Engine("P0", cfg, params, vp, num_blocks=64, max_batch=4,
+               max_seq_len=64, role="prefill")
+    d0 = Engine("D0", cfg, params, vd, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="decode")
+    d1 = Engine("D1", cfg, params, vd, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="decode")
+    pipe = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
+    sched = GlobalScheduler(pipe, prefill_chunk=4, chunk_budget=1)
+    for e in (p, d0, d1):
+        sched.add_instance(e)
+
+    req = _req(cfg, plen=24, rid="rq", max_new=4, seed=9)
+    sched.submit(req)
+    sched.step()
+    sched.step()
+    assert len(sched.inflight) == 1
+    sched.inflight[0].d.fail()          # decode node dies mid-stream
+    for _ in range(80):
+        if sched.stats.finished >= 1:
+            break
+        sched.step()
+    # exactly one life: one finish, exactly max_new tokens, one requeue
+    assert sched.stats.finished == 1
+    assert sched.stats.requeues == 1
+    assert len(req.output_tokens) == 4
+    assert req.state == State.FINISHED
+    assert not sched.inflight and not sched.pending

@@ -2,6 +2,9 @@
 the paper's core contribution: layout round-trips, TP merge/split identity,
 precision wire bounds."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 import jax

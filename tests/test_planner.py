@@ -2,6 +2,7 @@
 optimizer constraint satisfaction, and the paper's qualitative claims."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.configs.base import get_config

@@ -3,6 +3,7 @@ assigned arch), head/vocab padding properties, ZeRO spec construction,
 cell-grid shape."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 import jax

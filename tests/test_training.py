@@ -5,6 +5,7 @@ import tempfile
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 import jax
