@@ -2,16 +2,33 @@
 decode, GPU B for prefill, Llama2-7B) driven through the event simulator."""
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.configs.base import get_config
-from repro.core.planner.events import SimResult, simulate
+from repro.core.planner.events import (SimResult, kv_wire_bytes_per_token,
+                                       simulate)
 from repro.core.planner.hardware import GPU_A, GPU_B
 from repro.core.planner.simulator import (FrameworkModel, InstanceModel,
-                                          ParallelStrategy)
+                                          ParallelStrategy,
+                                          connector_chunk_tokens)
 from repro.core.planner.workload import Workload
+from repro.core.transport import make_connector
 
 CFG = get_config("llama2-7b")
+
+
+def connector_caps(connector: Optional[str], bandwidth_gbps: float = 25.0):
+    """capabilities() of the named KV-transport backend (None → None:
+    the simulator falls back to its bare transfer_gbps constant)."""
+    if connector is None:
+        return None
+    return make_connector(connector,
+                          bandwidth_gbps=bandwidth_gbps).capabilities()
+
+
+def wire_bytes_per_token() -> int:
+    """Canonical per-token KV wire bytes of the benchmark model (bf16)."""
+    return kv_wire_bytes_per_token(CFG)
 
 
 def models(chunked_prefill: bool = False,
@@ -25,11 +42,21 @@ def models(chunked_prefill: bool = False,
 
 def run(wl: Workload, n_p: int = 1, n_d: int = 1, mode: str = "disagg",
         duration_s: float = 120.0, chunked_prefill: bool = False,
-        prefill_chunk_tokens: int = 512) -> SimResult:
+        prefill_chunk_tokens: int = 512,
+        connector: Optional[str] = None,
+        bandwidth_gbps: float = 25.0) -> SimResult:
+    """``connector``: KV-transport backend name — wire time and streaming
+    chunk granularity are then sourced from its capabilities() descriptor
+    instead of the hard-coded 25 Gbps / 512-token constants."""
+    caps = connector_caps(connector, bandwidth_gbps)
+    if caps is not None and chunked_prefill:
+        prefill_chunk_tokens = connector_chunk_tokens(
+            caps, wire_bytes_per_token(), default=prefill_chunk_tokens)
     mP, mD = models(chunked_prefill=chunked_prefill,
                     prefill_chunk_tokens=prefill_chunk_tokens)
     return simulate(CFG, wl, p_model=mP, d_model=mD, n_prefill=n_p,
-                    n_decode=n_d, mode=mode, duration_s=duration_s)
+                    n_decode=n_d, mode=mode, duration_s=duration_s,
+                    connector_caps=caps)
 
 
 def row(label: str, r: SimResult) -> str:

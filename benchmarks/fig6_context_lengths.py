@@ -33,6 +33,18 @@ def main(duration: float = 120.0) -> dict:
     chk = run(wl_long, duration_s=duration, chunked_prefill=True)
     print(row("1024+1024 chunked-stream", chk))
 
+    # KV-connector wire models: the same sweep point with the wire sourced
+    # from a connector's capabilities() descriptor. inproc declares the
+    # default 25 Gbps and zero setup latency, so it must reproduce the
+    # hard-coded-constant numbers exactly; modeled RDMA adds a per-read
+    # setup latency and a preferred chunk granularity.
+    inp = run(wl_long, duration_s=duration, chunked_prefill=True,
+              connector="inproc")
+    rdma = run(wl_long, duration_s=duration, chunked_prefill=True,
+               connector="rdma")
+    print(row("1024+1024 inproc-connector", inp))
+    print(row("1024+1024 rdma-connector", rdma))
+
     ttft = {k: v.ttft_mean() for k, v in out.items()}
     tpot = {k: v.tpot_mean() for k, v in out.items()}
     mono_long = out[(1024, 1024)]
@@ -49,6 +61,13 @@ def main(duration: float = 120.0) -> dict:
         "tpot grows with context": tpot[(1024, 1024)] > tpot[(256, 256)],
         "capacity falls with context":
             cap[(1024, 1024)] < cap[(256, 256)],
+        # capabilities() plumb-through: a zero-setup-latency 25 Gbps
+        # connector is the hard-coded constant, modulo chunk granularity
+        "inproc connector caps match constant wire":
+            abs(inp.ttft_mean() - chk.ttft_mean())
+            <= 0.02 * chk.ttft_mean() + 1e-6,
+        "rdma fixed latency not free":
+            rdma.ttft_mean() >= inp.ttft_mean() - 1e-6,
     }
     for k, v in checks.items():
         print(f"  [{'ok' if v else 'X'}] {k}")

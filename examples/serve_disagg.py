@@ -11,10 +11,9 @@ import time
 import numpy as np
 import jax
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ConnectorConfig, ModelConfig
 from repro.core.compat.precision import WireFormat
 from repro.core.disagg import DisaggPipeline
-from repro.core.kv_transfer import TransferEngine
 from repro.models import model as M
 from repro.serving.engine import Engine, VendorProfile
 from repro.serving.request import Request
@@ -29,6 +28,11 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="tokens per streamed prefill chunk (0 = monolithic "
                          "single-tick handoff)")
+    ap.add_argument("--connector", default="inproc",
+                    choices=["inproc", "shm", "rdma"],
+                    help="KV-transport backend: in-process (zero-copy), "
+                         "shared-memory (real cross-process staging), or "
+                         "modeled-RDMA (async multi-tick completion)")
     args = ap.parse_args()
 
     # ~100M params: 16L × d640 (GQA 10/5), vocab 16k
@@ -55,8 +59,14 @@ def main():
     d0 = mk("D0", vendor_d, "decode")
     d1 = mk("D1", vendor_d, "decode")
 
-    pipeline = DisaggPipeline(TransferEngine(bandwidth_gbps=25.0),
-                              WireFormat("raw", "float32"))
+    connector = ConnectorConfig(kind=args.connector,
+                                bandwidth_gbps=25.0).build()
+    caps = connector.capabilities()
+    print(f"KV connector: {caps.transport} ({caps.bandwidth_gbps:g} Gbps, "
+          f"{caps.fixed_latency_s*1e6:g} µs/read, "
+          f"max {caps.max_inflight} in flight, "
+          f"{'cross-process' if caps.cross_process else 'in-process'})")
+    pipeline = DisaggPipeline(connector, WireFormat("raw", "float32"))
     # chunked streaming: each prefill chunk's KV hits the wire while the
     # next chunk computes, and decode steps interleave with long prefills
     sched = GlobalScheduler(pipeline, prefill_chunk=args.prefill_chunk)
@@ -110,6 +120,7 @@ def main():
     assert len(done) == len(reqs), "lost requests!"
     sample = reqs[0]
     print(f"sample stream {sample.req_id}: {sample.output_tokens[:12]}...")
+    connector.close()                 # free staged buffers / shm segments
 
 
 if __name__ == "__main__":

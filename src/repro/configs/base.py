@@ -75,6 +75,34 @@ class FrontendConfig:
 
 
 @dataclass(frozen=True)
+class ConnectorConfig:
+    """Deployment-side selection of the P→D KV-transport backend.
+
+    Pure data, like every config here: ``kind`` names a backend in the
+    ``repro.core.transport`` registry, and ``build()`` instantiates it
+    (fields a backend does not accept are dropped by the factory, so one
+    config can describe any backend)."""
+    kind: str = "inproc"            # inproc | shm | rdma (registry name)
+    bandwidth_gbps: float = 25.0
+    fixed_latency_s: float = 5e-6   # per-read setup cost (modeled backends)
+    max_inflight: int = 32          # concurrent issued-but-unread reads
+    buffer_capacity_bytes: int = 1 << 32
+    tick_seconds: float = 1e-4      # rdma: wire progress per scheduler tick
+    chunk_bytes: int = 256 << 10    # rdma: preferred wire granularity
+
+    def build(self):
+        """Instantiate the configured KV connector."""
+        from repro.core.transport import make_connector
+        return make_connector(self.kind,
+                              bandwidth_gbps=self.bandwidth_gbps,
+                              fixed_latency_s=self.fixed_latency_s,
+                              max_inflight=self.max_inflight,
+                              buffer_capacity_bytes=self.buffer_capacity_bytes,
+                              tick_seconds=self.tick_seconds,
+                              chunk_bytes=self.chunk_bytes)
+
+
+@dataclass(frozen=True)
 class ModelConfig:
     name: str
     family: str                     # dense | moe | audio | hybrid | vlm | ssm

@@ -1,6 +1,8 @@
 """The paper's primary contribution: P/D disaggregation for heterogeneous
-accelerator pools — orchestrator, KV transfer engine, heterogeneous
-compatible transmission module (compat/), and the deployment planner
-(planner/)."""
+accelerator pools — orchestrator, pluggable KV-transport connectors
+(transport/), heterogeneous compatible transmission module (compat/), and
+the deployment planner (planner/)."""
 from repro.core.disagg import DisaggPipeline        # noqa: F401
 from repro.core.kv_transfer import TransferEngine   # noqa: F401
+from repro.core.transport import (KVConnector,      # noqa: F401
+                                  make_connector)

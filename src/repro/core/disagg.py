@@ -20,13 +20,22 @@ Two handoff shapes share the same encode/materialize core:
     scales) make chunk splitting lossless, so streaming lands bit-identical
     pool contents vs the monolithic wire.
 
+The wire itself is a pluggable :class:`~repro.core.transport.KVConnector`:
+``send_chunk`` stages a chunk and *issues* an async read
+(:class:`~repro.core.transport.TransferHandle`); ``poll_reads`` re-pages
+chunks whose handles report complete. With an instant backend (inproc/shm)
+a chunk is re-paged in the tick it was sent; with a modeled-latency
+backend (rdma) handles complete over later ticks and the scheduler runs
+decode steps while chunks are still on the wire.
+
 The same pipeline with P == D and a raw wire is the *integrated* baseline
 (prefill materializes into the local pools with no conversion), which is
 what the paper's Figs. 9–10 compare against.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+import collections
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +43,7 @@ import numpy as np
 
 from repro.core.compat import parallel_align, precision
 from repro.core.compat.precision import WireFormat
-from repro.core.kv_transfer import TransferEngine
+from repro.core.transport import KVConnector, TransferHandle
 from repro.serving import paged_cache as PC
 from repro.serving.engine import Engine, kv_entries_with_start
 from repro.serving.request import Request
@@ -47,7 +56,7 @@ def _to_device(payload):
 
 
 class DisaggPipeline:
-    def __init__(self, transfer: TransferEngine,
+    def __init__(self, transfer: KVConnector,
                  wire: Optional[WireFormat] = None):
         self.transfer = transfer
         self.wire = wire or WireFormat(kind="raw", dtype="bfloat16")
@@ -222,20 +231,32 @@ class DisaggPipeline:
     # ------------------------------------------------------------------ #
     def handoff(self, req: Request, p_engine: Engine, d_engine: Engine
                 ) -> Dict[str, Any]:
-        """prefill-package → stage → read → materialize. Returns meta."""
+        """prefill-package → stage → issue_read → wait → materialize.
+
+        Synchronous by construction: the monolithic wire has nothing to
+        overlap, so ``wait()`` force-completes the read (with a modeled
+        backend the whole wire time lands exposed). Returns meta."""
+        self.transfer.register(p_engine.name, role="prefill")
+        self.transfer.register(d_engine.name, role="decode")
         package = p_engine.prefill(req)
         wire_pkg, meta = self.encode_package(p_engine, package)
-        key = f"{req.req_id}@{p_engine.name}"
+        # retry-unique key: a failed handoff leaves no stale staging to
+        # collide with the requeued attempt
+        key = f"{req.req_id}@{p_engine.name}#t{req.retries}"
         nbytes = self.transfer.stage(key, wire_pkg, meta)
-        payload, meta = self.transfer.read(key)
-        payload = _to_device(payload)
+        try:
+            payload, meta = self.transfer.issue_read(key).wait()
+            payload = _to_device(payload)
 
-        def materialize_fn(engine, slot, bids, _pkg):
-            self.materialize(engine, slot, bids, payload, meta)
+            def materialize_fn(engine, slot, bids, _pkg):
+                self.materialize(engine, slot, bids, payload, meta)
 
-        d_engine.add_sequence(req, {"first_token": meta["first_token"],
-                                    "seq_len": meta["seq_len"]},
-                              materialize_fn)
+            d_engine.add_sequence(req, {"first_token": meta["first_token"],
+                                        "seq_len": meta["seq_len"]},
+                                  materialize_fn)
+        except Exception:
+            self.transfer.drop(key)    # free the pinned staging on failure
+            raise
         self.transfer.complete(key)
         meta["bytes"] = nbytes
         return meta
@@ -272,6 +293,7 @@ class DisaggPipeline:
                 if chunk is None:
                     break
                 h.send_chunk(chunk)
+                h.poll_reads()          # re-page whatever the wire delivered
             return h.finalize(stream.first_token, stream.tail_package())
         except Exception:
             h.abort()
@@ -281,11 +303,13 @@ class DisaggPipeline:
 class StreamedHandoff:
     """State of one in-flight chunked P→D handoff.
 
-    Lifecycle: reserve (ctor) → ``send_chunk``×N → ``finalize`` | ``abort``.
-    Each ``send_chunk`` encodes one chunk, stages it into the pinned pool,
-    RDMA-reads it on the D side, and re-pages it immediately — in the real
-    serving loop the next chunk's compute proceeds while this happens, so
-    every chunk's modeled wire time except the last is overlap."""
+    Lifecycle: reserve (ctor) → (``send_chunk`` | ``poll_reads``)×N →
+    ``finalize`` | ``abort``. ``send_chunk`` encodes one chunk, stages it
+    into the pinned pool, and *issues* an async wire read; ``poll_reads``
+    re-pages chunks whose :class:`TransferHandle` reports complete — the
+    D-side re-page runs on its own tick budget, decoupled from wire time.
+    Chunks re-page in issue order (the wire is an ordered channel), so a
+    later chunk never lands before an earlier one that shares a block."""
 
     def __init__(self, pipeline: DisaggPipeline, req: Request,
                  p_engine: Engine, d_engine: Engine, seq_len: int, *,
@@ -296,46 +320,112 @@ class StreamedHandoff:
         self.d_engine = d_engine
         self.seq_len = seq_len
         self.compute_overlapped = compute_overlapped
+        pipeline.transfer.register(p_engine.name, role="prefill")
+        pipeline.transfer.register(d_engine.name, role="decode")
         self.slot, self.block_ids = d_engine.reserve_sequence(req, seq_len)
         self.meta = {"seq_len": seq_len, "tp_p": p_engine.vendor.tp,
                      "wire": pipeline.wire}
         self.chunks_sent = 0
+        self.chunks_repaged = 0
         self.bytes = 0
+        self._pending: Deque[Tuple[str, TransferHandle, float]] = \
+            collections.deque()
         self._chunk_modeled: List[float] = []
         self._chunk_compute: List[float] = []
         self._closed = False
 
+    # -- wire side -------------------------------------------------------- #
+    def can_send(self) -> bool:
+        """Channel has room for another issued-but-unread chunk (the
+        connector's ``max_inflight`` capability, not a constant here).
+        The channel is shared: concurrent flights throttle against the
+        connector's *global* in-flight count, not their own queue."""
+        caps = self.pipeline.transfer.capabilities()
+        return self.pipeline.transfer.inflight_reads() < caps.max_inflight
+
+    def pending_reads(self) -> int:
+        """Chunks issued on the wire but not yet re-paged on D."""
+        return len(self._pending)
+
     def send_chunk(self, chunk: Dict[str, Any]) -> int:
-        """Encode → stage → read → re-page one chunk. Returns its bytes."""
+        """Encode → stage → issue the wire read for one chunk. Returns its
+        staged bytes. If the channel is full, force-completes the oldest
+        read first (blocking send — its wire time lands exposed)."""
         assert not self._closed, "send_chunk on a closed handoff"
         if self.d_engine.failed:
             raise RuntimeError(f"instance {self.d_engine.name} is down")
+        while not self.can_send():
+            if not self._repage_head(force=True):
+                break                  # channel held by other flights —
+        #                                issue_read below surfaces the limit
         tr = self.pipeline.transfer
         wire_chunk = self.pipeline.encode_chunk(self.p_engine, chunk)
-        key = f"{self.req.req_id}@{self.p_engine.name}#c{self.chunks_sent}"
+        key = f"{self.req.req_id}@{self.p_engine.name}" \
+              f"#t{self.req.retries}c{self.chunks_sent}"
         nbytes = tr.stage(key, wire_chunk, self.meta)
-        payload, meta = tr.read(key)
+        try:
+            handle = tr.issue_read(key)
+        except Exception:
+            tr.drop(key)
+            raise
+        self._pending.append((key, handle,
+                              chunk.get("compute_seconds", 0.0)))
+        self.chunks_sent += 1
+        self.bytes += nbytes
+        return nbytes
+
+    # -- D side ----------------------------------------------------------- #
+    def _repage_head(self, force: bool = False) -> bool:
+        """Re-page the oldest pending chunk if its read completed (or
+        unconditionally when ``force``). Returns True if it re-paged."""
+        if not self._pending:
+            return False
+        key, handle, compute_s = self._pending[0]
+        if not force and not handle.poll():
+            return False
+        if self.d_engine.failed:
+            raise RuntimeError(f"instance {self.d_engine.name} is down")
+        tr = self.pipeline.transfer
+        payload, meta = handle.wait()
         self.pipeline.materialize(self.d_engine, self.slot, self.block_ids,
                                   _to_device(payload), meta, rmw=True)
         tr.complete(key)
         tr.stats.chunks += 1
-        self._chunk_modeled.append(tr.modeled_latency(nbytes))
-        self._chunk_compute.append(chunk.get("compute_seconds", 0.0))
-        self.chunks_sent += 1
-        self.bytes += nbytes
-        return nbytes
+        self._chunk_modeled.append(tr.modeled_latency(handle.nbytes))
+        self._chunk_compute.append(compute_s)
+        self._pending.popleft()
+        self.chunks_repaged += 1
+        return True
+
+    def poll_reads(self, budget: Optional[int] = None) -> int:
+        """Re-page up to ``budget`` completed chunks (None = every chunk
+        whose handle polls complete). The scheduler calls this with its
+        per-tick re-page budget — separate from the chunk-send budget."""
+        done = 0
+        while (budget is None or done < budget) and self._repage_head():
+            done += 1
+        return done
+
+    def drain(self) -> int:
+        """Force-complete and re-page every pending read (sync fallback)."""
+        done = 0
+        while self._repage_head(force=True):
+            done += 1
+        return done
 
     def finalize(self, first_token: int, tail_package: Dict[str, Any]
                  ) -> Dict[str, Any]:
         """Ship recurrent/cross state, activate the D slot, account overlap."""
         assert not self._closed
+        self.drain()
         tr = self.pipeline.transfer
         if tail_package.get("states") or tail_package.get("cross"):
-            key = f"{self.req.req_id}@{self.p_engine.name}#tail"
+            key = f"{self.req.req_id}@{self.p_engine.name}" \
+                  f"#t{self.req.retries}tail"
             nbytes = tr.stage(key, {"states": tail_package["states"],
                                     "cross": tail_package["cross"]},
                               self.meta)
-            payload, meta = tr.read(key)
+            payload, meta = tr.issue_read(key).wait()
             self.pipeline.materialize(self.d_engine, self.slot,
                                       self.block_ids, _to_device(payload),
                                       meta)
@@ -357,8 +447,14 @@ class StreamedHandoff:
                 "bytes": self.bytes, "chunks": self.chunks_sent}
 
     def abort(self) -> None:
-        """Failure path: free the D reservation."""
+        """Failure path: drop staged-but-unread chunks and free the D
+        reservation (their handles fail with TransferError if waited)."""
         if self._closed:
             return
         self._closed = True
+        tr = self.pipeline.transfer
+        while self._pending:
+            key, handle, _comp = self._pending.popleft()
+            handle.cancel()
+            tr.drop(key)
         self.d_engine.abort_reservation(self.slot)

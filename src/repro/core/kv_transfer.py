@@ -1,121 +1,26 @@
-"""KV transfer engine (paper §III-B-1).
+"""Back-compat shim: the KV transfer engine now lives in
+``repro.core.transport`` as a pluggable connector API (paper §III-B).
 
-Models the paper's RDMA read flow: the P instance stages KV into a managed
-pinned-CPU-buffer pool (registered once, reused — "reduce the overhead
-caused by temporary allocation"), the D instance *reads* it by key, then
-frees the buffer. On this container the "wire" is process memory; byte and
-latency accounting flow to the scheduler and the planner's communication
-operator library.
+``TransferEngine`` is an alias of the default backend
+(:class:`~repro.core.transport.InProcessConnector`), which preserves the
+original semantics — zero-copy in-process staging, stage/read/complete
+lifecycle, pinned-pool and modeled-latency accounting — behind the new
+``issue_read`` → :class:`~repro.core.transport.TransferHandle` data plane.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any, Dict, List, Optional, Tuple
+from repro.core.transport import (ConnectorCapabilities,  # noqa: F401
+                                  InProcessConnector, KVConnector,
+                                  ModeledRDMAConnector, PinnedBufferPool,
+                                  SharedMemoryConnector, TransferError,
+                                  TransferHandle, TransferStats,
+                                  make_connector, tree_bytes)
 
-import jax
-import numpy as np
+TransferEngine = InProcessConnector
 
-
-@dataclasses.dataclass
-class TransferStats:
-    transfers: int = 0
-    bytes_moved: int = 0
-    chunks: int = 0                 # streamed KV chunks (overlapped handoff)
-    stage_seconds: float = 0.0      # wall time spent staging (P side)
-    read_seconds: float = 0.0       # wall time spent reading (D side)
-    modeled_seconds: float = 0.0    # bytes / modeled_bandwidth
-    overlap_modeled_seconds: float = 0.0  # modeled wire time hidden under
-    #                                       the next chunk's prefill compute
-    peak_buffer_bytes: int = 0
-    retries: int = 0
-
-    @property
-    def exposed_modeled_seconds(self) -> float:
-        """Modeled wire time left on the critical path after overlap."""
-        return self.modeled_seconds - self.overlap_modeled_seconds
-
-
-class PinnedBufferPool:
-    """Fixed-capacity staging pool with high-water accounting.
-
-    Registered-once semantics: acquire/release only move a watermark — no
-    per-transfer allocation, mirroring the paper's pre-registered RDMA
-    buffers (zero-copy)."""
-
-    def __init__(self, capacity_bytes: int):
-        self.capacity = capacity_bytes
-        self.in_use = 0
-        self.high_water = 0
-
-    def acquire(self, nbytes: int) -> None:
-        if self.in_use + nbytes > self.capacity:
-            raise MemoryError(
-                f"pinned pool exhausted: {self.in_use + nbytes} > {self.capacity}")
-        self.in_use += nbytes
-        self.high_water = max(self.high_water, self.in_use)
-
-    def release(self, nbytes: int) -> None:
-        self.in_use = max(0, self.in_use - nbytes)
-
-
-def _tree_bytes(tree) -> int:
-    return sum(x.nbytes for x in jax.tree.leaves(tree)
-               if hasattr(x, "nbytes"))
-
-
-class TransferEngine:
-    """Key-value staged transfer between instances.
-
-    control-plane: (key, metadata) registration; data-plane: read(key).
-    """
-
-    def __init__(self, bandwidth_gbps: float = 25.0,
-                 buffer_capacity_bytes: int = 1 << 32):
-        self.bandwidth = bandwidth_gbps * 1e9
-        self.pool = PinnedBufferPool(buffer_capacity_bytes)
-        self._staged: Dict[str, Tuple[Any, Dict[str, Any], int]] = {}
-        self.stats = TransferStats()
-
-    # -- P side ---------------------------------------------------------- #
-    def stage(self, key: str, payload, meta: Optional[Dict[str, Any]] = None
-              ) -> int:
-        """Register a payload (pytree) for remote read. Returns its bytes."""
-        t0 = time.perf_counter()
-        payload = jax.tree.map(
-            lambda x: np.asarray(x) if hasattr(x, "shape") else x, payload)
-        nbytes = _tree_bytes(payload)
-        self.pool.acquire(nbytes)
-        self._staged[key] = (payload, meta or {}, nbytes)
-        self.stats.stage_seconds += time.perf_counter() - t0
-        self.stats.peak_buffer_bytes = self.pool.high_water
-        return nbytes
-
-    # -- D side ---------------------------------------------------------- #
-    def read(self, key: str):
-        """RDMA-read analogue: returns (payload, meta); accounts latency."""
-        t0 = time.perf_counter()
-        if key not in self._staged:
-            raise KeyError(f"transfer key {key!r} not staged (P lost?)")
-        payload, meta, nbytes = self._staged[key]
-        self.stats.transfers += 1
-        self.stats.bytes_moved += nbytes
-        self.stats.modeled_seconds += nbytes / self.bandwidth
-        self.stats.read_seconds += time.perf_counter() - t0
-        return payload, meta
-
-    def complete(self, key: str) -> None:
-        """D finished materializing — free the pinned buffer."""
-        entry = self._staged.pop(key, None)
-        if entry is not None:
-            self.pool.release(entry[2])
-
-    def staged_keys(self) -> List[str]:
-        return list(self._staged)
-
-    def drop(self, key: str) -> None:
-        """P-side failure path: drop a staged payload."""
-        self.complete(key)
-
-    def modeled_latency(self, nbytes: int) -> float:
-        return nbytes / self.bandwidth
+__all__ = [
+    "ConnectorCapabilities", "KVConnector", "TransferEngine",
+    "InProcessConnector", "SharedMemoryConnector", "ModeledRDMAConnector",
+    "PinnedBufferPool", "TransferError", "TransferHandle", "TransferStats",
+    "make_connector", "tree_bytes",
+]

@@ -19,8 +19,23 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.planner.simulator import InstanceModel
+from repro.core.planner.simulator import InstanceModel, connector_wire_time
 from repro.core.planner.workload import Workload
+
+
+def kv_wire_bytes_per_token(cfg: ModelConfig, wbytes: int = 2) -> int:
+    """Canonical per-token P→D wire bytes across all attention layers —
+    the single source for both the event sim's transfer time and the
+    connector-granularity chunk sizing (attention-kind aware: MLA ships
+    the latent cache, states-only families ship no per-token KV)."""
+    if cfg.attention_kind == "mla":
+        per_tok = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * wbytes
+    elif cfg.attention_kind == "none":
+        per_tok = 0
+    else:
+        per_tok = 2 * max(cfg.num_kv_heads, 1) * cfg.hd * wbytes
+    n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
+    return per_tok * max(n_attn, 1)
 
 
 @dataclasses.dataclass
@@ -127,12 +142,17 @@ def simulate(cfg: ModelConfig, wl: Workload, *,
              p_model: InstanceModel, d_model: InstanceModel,
              n_prefill: int = 1, n_decode: int = 1,
              mode: str = "disagg", duration_s: float = 120.0,
-             transfer_gbps: float = 25.0, poisson: bool = False,
+             transfer_gbps: float = 25.0, connector_caps=None,
+             poisson: bool = False,
              seed: int = 0, max_batch_cap: int = 256,
              drain: bool = True) -> SimResult:
     """In ``integrated`` mode the (p_model, n_prefill) pair describes the
     first integrated pool and (d_model, n_decode) the second — pass the same
-    hardware sets as the disagg run for a cost-fair comparison."""
+    hardware sets as the disagg run for a cost-fair comparison.
+
+    ``connector_caps``: a KV connector's ``capabilities()`` descriptor —
+    when given, the P→D wire time is sourced from it (bandwidth + fixed
+    per-read latency) instead of the bare ``transfer_gbps`` constant."""
     rng = np.random.default_rng(seed)
     arrivals: List[float] = []
     t = 0.0
@@ -163,16 +183,13 @@ def simulate(cfg: ModelConfig, wl: Workload, *,
         insts = p_pool + d_pool
 
     # P→D wire bytes per request (canonical KV of the prompt)
-    wb = 2
-    if cfg.attention_kind == "mla":
-        per_tok = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * wb
-    elif cfg.attention_kind == "none":
-        per_tok = 0
+    kv_bytes = kv_wire_bytes_per_token(cfg) * wl.input_len
+    if mode != "disagg":
+        xfer = 0.0
+    elif connector_caps is not None:
+        xfer = connector_wire_time(kv_bytes, connector_caps)
     else:
-        per_tok = 2 * max(cfg.num_kv_heads, 1) * cfg.hd * wb
-    n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
-    kv_bytes = per_tok * max(n_attn, 1) * wl.input_len
-    xfer = kv_bytes / (transfer_gbps * 1e9) if mode == "disagg" else 0.0
+        xfer = kv_bytes / (transfer_gbps * 1e9)
 
     evq: List[Tuple[float, int, str, object]] = []
     counter = 0

@@ -252,6 +252,30 @@ def p2p_time(nbytes: float, hw: HardwareSpec) -> float:
     return nbytes / hw.eff_link + 2e-6
 
 
+def connector_wire_time(nbytes: float, caps) -> float:
+    """P→D wire entry of the communication operator library, sourced from a
+    KV connector's ``capabilities()`` (fixed latency + bytes/bandwidth)
+    instead of a hard-coded bandwidth constant. ``caps`` is any object with
+    the :class:`repro.core.transport.ConnectorCapabilities` shape."""
+    if nbytes <= 0:
+        return 0.0
+    return caps.fixed_latency_s + nbytes / (caps.bandwidth_gbps * 1e9)
+
+
+def connector_chunk_tokens(caps, per_token_wire_bytes: float,
+                           default: int = 512) -> int:
+    """Streaming chunk size (tokens) honoring the connector's preferred
+    wire granularity. Falls back to ``default`` when the connector
+    declares none (``chunk_bytes == 0``) — or when the granularity is
+    smaller than a single token's wire bytes, where honoring it would
+    degenerate to 1-token chunks instead of a comparable regime."""
+    if caps is None or getattr(caps, "chunk_bytes", 0) <= 0 \
+            or per_token_wire_bytes <= 0 \
+            or caps.chunk_bytes < per_token_wire_bytes:
+        return default
+    return int(caps.chunk_bytes // per_token_wire_bytes)
+
+
 def alltoall_time(nbytes: float, ep: int, hw: HardwareSpec) -> float:
     if ep <= 1:
         return 0.0

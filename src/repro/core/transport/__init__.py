@@ -1,0 +1,60 @@
+"""Pluggable KV-transport connectors (paper §III-B wire seam).
+
+Backends register here by name; everything above the wire — the disagg
+pipeline, the global scheduler, the planner — programs against
+:class:`KVConnector` + :class:`TransferHandle` + ``capabilities()`` and
+never against a concrete backend.
+
+  inproc  — process memory, zero-copy, instant completion (default; the
+            original ``TransferEngine`` semantics)
+  shm     — real cross-process staging via multiprocessing.shared_memory,
+            serialized wire entries
+  rdma    — modeled per-read latency on a virtual clock; handles complete
+            over multiple scheduler ticks (true async wire)
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Dict, Type
+
+from repro.core.transport.base import (ConnectorCapabilities,  # noqa: F401
+                                       KVConnector, PinnedBufferPool,
+                                       TransferError, TransferHandle,
+                                       TransferStats, tree_bytes)
+from repro.core.transport.inprocess import InProcessConnector  # noqa: F401
+from repro.core.transport.modeled_rdma import ModeledRDMAConnector  # noqa: F401
+from repro.core.transport.shared_memory import SharedMemoryConnector  # noqa: F401
+
+CONNECTORS: Dict[str, Type[KVConnector]] = {
+    InProcessConnector.transport: InProcessConnector,
+    SharedMemoryConnector.transport: SharedMemoryConnector,
+    ModeledRDMAConnector.transport: ModeledRDMAConnector,
+}
+
+
+def register_connector(cls: Type[KVConnector]) -> Type[KVConnector]:
+    """Register a new backend under ``cls.transport`` (decorator-friendly)."""
+    CONNECTORS[cls.transport] = cls
+    return cls
+
+
+def make_connector(kind: str = "inproc", **kwargs: Any) -> KVConnector:
+    """Build a connector by registry name.
+
+    Keyword arguments not accepted by the chosen backend (e.g.
+    ``tick_seconds`` for ``inproc``) are silently dropped, so one shared
+    config can drive any backend."""
+    if kind not in CONNECTORS:
+        raise KeyError(
+            f"unknown KV connector {kind!r}; known: {sorted(CONNECTORS)}")
+    cls = CONNECTORS[kind]
+    accepted = inspect.signature(cls.__init__).parameters
+    return cls(**{k: v for k, v in kwargs.items() if k in accepted})
+
+
+__all__ = [
+    "ConnectorCapabilities", "KVConnector", "PinnedBufferPool",
+    "TransferError", "TransferHandle", "TransferStats", "tree_bytes",
+    "InProcessConnector", "SharedMemoryConnector", "ModeledRDMAConnector",
+    "CONNECTORS", "register_connector", "make_connector",
+]

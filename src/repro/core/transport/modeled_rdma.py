@@ -1,0 +1,65 @@
+"""Modeled-RDMA connector: async completion over multiple scheduler ticks.
+
+Storage is in-process (this container has no NIC), but every read carries
+the modeled wire cost of an RDMA read — a fixed per-read setup latency
+plus ``bytes / bandwidth`` — on a connector-internal virtual clock. The
+global scheduler advances that clock by ``tick_seconds`` per tick
+(``tick()``), so a chunk's handle stays in flight across ticks and decode
+steps run *while the wire is busy*; ``wait()`` force-completes by
+fast-forwarding the clock (the forced-sync path, fully exposed wire time).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.transport.base import KVConnector, tree_bytes
+
+
+class ModeledRDMAConnector(KVConnector):
+    transport = "rdma"
+
+    def __init__(self, bandwidth_gbps: float = 25.0,
+                 buffer_capacity_bytes: int = 1 << 32,
+                 fixed_latency_s: float = 5e-6,
+                 max_inflight: int = 32,
+                 tick_seconds: float = 1e-4,
+                 chunk_bytes: int = 256 << 10):
+        super().__init__(bandwidth_gbps=bandwidth_gbps,
+                         buffer_capacity_bytes=buffer_capacity_bytes,
+                         fixed_latency_s=fixed_latency_s,
+                         max_inflight=max_inflight)
+        self.tick_seconds = tick_seconds
+        self.chunk_bytes = chunk_bytes
+        self._staged: Dict[str, Tuple[Any, Dict[str, Any]]] = {}
+        self._wire_free_at = 0.0       # the link is a shared serial resource
+
+    def capabilities(self):
+        return dataclasses.replace(super().capabilities(),
+                                   chunk_bytes=self.chunk_bytes,
+                                   cross_process=False, zero_copy=False)
+
+    # -- modeled async completion ----------------------------------------- #
+    def tick(self, dt: Optional[float] = None) -> None:
+        """One scheduler tick of wire progress on the virtual clock."""
+        self._now += self.tick_seconds if dt is None else dt
+
+    def _ready_time(self, nbytes: int) -> float:
+        # serialize reads on the link: a read starts when the wire frees up
+        start = max(self._now, self._wire_free_at)
+        ready = start + self.fixed_latency_s + nbytes / self.bandwidth
+        self._wire_free_at = ready
+        return ready
+
+    # -- storage hooks ---------------------------------------------------- #
+    def _put(self, key: str, payload, meta: Dict[str, Any]) -> int:
+        nbytes = tree_bytes(payload)
+        self.pool.acquire(nbytes)
+        self._staged[key] = (payload, meta)
+        return nbytes
+
+    def _get(self, key: str) -> Tuple[Any, Dict[str, Any]]:
+        return self._staged[key]
+
+    def _evict(self, key: str) -> None:
+        self._staged.pop(key, None)

@@ -45,13 +45,14 @@ def compile_programs(arch: str, shape: str, multi_pod: bool) -> None:
               f"{tot/2**30:.2f} GiB/chip")
 
 
-def demo() -> None:
+def demo(connector: str = "inproc") -> None:
     import subprocess
     import sys
     root = os.path.join(os.path.dirname(__file__), "..", "..", "..")
     subprocess.run([sys.executable,
                     os.path.join(root, "examples", "serve_disagg.py"),
-                    "--requests", "8", "--max-new", "8"], check=True)
+                    "--requests", "8", "--max-new", "8",
+                    "--connector", connector], check=True)
 
 
 def main() -> None:
@@ -60,9 +61,12 @@ def main() -> None:
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--demo", action="store_true")
+    ap.add_argument("--connector", default="inproc",
+                    choices=["inproc", "shm", "rdma"],
+                    help="KV-transport backend for the --demo serving loop")
     args = ap.parse_args()
     if args.demo:
-        demo()
+        demo(args.connector)
     else:
         compile_programs(args.arch, args.shape, args.multi_pod)
 

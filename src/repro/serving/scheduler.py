@@ -63,11 +63,17 @@ class GlobalScheduler:
                  straggler_factor: float = 8.0,
                  prefill_chunk: Optional[int] = None,
                  chunk_budget: int = 1,
+                 repage_budget: Optional[int] = None,
                  max_retries: int = 8):
         """``prefill_chunk``: tokens per streamed prefill chunk. ``None``
         keeps the monolithic single-tick handoff; set it to stream long
         prefills across ticks (``chunk_budget`` chunks per flight per tick)
         so decode steps interleave with a long prompt's prefill.
+
+        ``repage_budget``: D-side re-pages per flight per tick — a budget
+        *separate* from ``chunk_budget``, so wire time (chunks in flight on
+        the connector) and D-side re-page pipeline independently. ``None``
+        re-pages every chunk whose read handle reports complete.
 
         ``max_retries``: dispatch/flight failures requeue the request up to
         this many times, then mark it FAILED (permanent failures must not
@@ -80,6 +86,8 @@ class GlobalScheduler:
         self.prefill_chunk = prefill_chunk \
             if prefill_chunk is not None and prefill_chunk > 0 else None
         self.chunk_budget = max(chunk_budget, 1)
+        self.repage_budget = repage_budget \
+            if repage_budget is None else max(repage_budget, 1)
         self.p_pool: Dict[str, Engine] = {}
         self.d_pool: Dict[str, Engine] = {}
         self.pending: collections.deque[Request] = collections.deque()
@@ -145,6 +153,8 @@ class GlobalScheduler:
         req.retries += 1
         req.state = State.QUEUED
         self.stats.requeues += 1
+        # failure accounting is wire-visible: a requeue retries the transfer
+        self.pipeline.transfer.stats.retries += 1
         self.pending.appendleft(req)
 
     def _handle_failures(self) -> None:
@@ -169,10 +179,16 @@ class GlobalScheduler:
 
     def _advance_flight(self, fl: _Flight, budget: Optional[int]
                         ) -> Optional[int]:
-        """Stream up to ``budget`` chunks (None = to completion). Returns
-        the first token when the flight finalizes, else None."""
+        """One tick of flight progress: re-page chunks whose wire reads
+        completed (``repage_budget``), then stream up to ``budget`` new
+        chunks (None = to completion) while the connector channel has room.
+        The flight finalizes only when the prefill stream is exhausted AND
+        every issued read has been re-paged — with a modeled-latency
+        connector the tail chunks complete in later ticks, and decode steps
+        run in between. Returns the first token on finalize, else None."""
+        repaged = fl.handoff.poll_reads(self.repage_budget)
         sent = 0
-        while budget is None or sent < budget:
+        while (budget is None or sent < budget) and fl.handoff.can_send():
             chunk = fl.stream.next_chunk()
             if chunk is None:
                 break
@@ -180,7 +196,13 @@ class GlobalScheduler:
             fl.req.chunks_streamed += 1
             self.stats.chunks_streamed += 1
             sent += 1
-        if not fl.stream.done:
+        # instant backends complete at issue time — spend what is left of
+        # the re-page budget on the chunks just sent
+        if self.repage_budget is None:
+            fl.handoff.poll_reads(None)
+        elif repaged < self.repage_budget:
+            fl.handoff.poll_reads(self.repage_budget - repaged)
+        if not fl.stream.done or fl.handoff.pending_reads():
             return None
         meta = fl.handoff.finalize(fl.stream.first_token,
                                    fl.stream.tail_package())
@@ -209,6 +231,8 @@ class GlobalScheduler:
     def step(self) -> List[Tuple[Request, int]]:
         """One scheduler tick. Returns emitted (request, token) pairs."""
         self._handle_failures()
+        # advance the wire: async connectors progress in-flight reads here
+        self.pipeline.transfer.tick()
         emitted: List[Tuple[Request, int]] = []
 
         # 1. dispatch pending requests: start a prefill flight on a free P

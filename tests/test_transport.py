@@ -1,0 +1,476 @@
+"""Pluggable KV-transport connectors: shared conformance suite across all
+three backends (inproc / shm / rdma), connector failure paths, async
+multi-tick completion, and bit-identical streamed handoff per backend.
+
+Every backend must honor the same contract:
+
+  stage → issue_read → (poll | wait) → complete      happy path
+  stage → issue_read → drop → wait                   raises TransferError
+  issue_read of an unknown key                       raises KeyError
+  pool exhaustion under concurrent flights           raises MemoryError,
+                                                     recoverable after
+                                                     complete()
+"""
+import pickle
+from multiprocessing import shared_memory
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.compat.precision import WireFormat
+from repro.core.disagg import DisaggPipeline
+from repro.core.transport import (CONNECTORS, InProcessConnector,
+                                  ModeledRDMAConnector, PinnedBufferPool,
+                                  SharedMemoryConnector, TransferError,
+                                  make_connector)
+from repro.models import model as M
+from repro.serving.engine import Engine, VendorProfile
+from repro.serving.request import Request
+from repro.serving.scheduler import GlobalScheduler
+from tests.conftest import TINY_FAMILIES
+
+BACKENDS = sorted(CONNECTORS)          # ["inproc", "rdma", "shm"]
+
+
+def _mk(kind: str, **kw):
+    return make_connector(kind, **kw)
+
+
+@pytest.fixture(params=BACKENDS)
+def conn(request):
+    c = _mk(request.param)
+    yield c
+    c.close()
+
+
+def _payload(n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"k": rng.normal(size=(n, 2, 4)).astype(np.float32),
+            "scales": rng.normal(size=(n,)).astype(np.float32)}
+
+
+# --------------------------------------------------------------------- #
+# conformance: lifecycle
+# --------------------------------------------------------------------- #
+def test_lifecycle_stage_issue_poll_wait_complete(conn):
+    pay = _payload()
+    n = conn.stage("r0@P0", pay, {"seq": 8})
+    assert n > 0
+    assert conn.staged_keys() == ["r0@P0"]
+    h = conn.issue_read("r0@P0")
+    assert h.nbytes == n
+    assert conn.inflight_reads() == 1
+    # wait() force-completes even when poll() is still False (modeled wire)
+    got, meta = h.wait()
+    assert h.poll()
+    assert conn.inflight_reads() == 0
+    np.testing.assert_array_equal(got["k"], pay["k"])
+    np.testing.assert_array_equal(got["scales"], pay["scales"])
+    assert meta == {"seq": 8}
+    # wait() is idempotent — cached result, no double accounting
+    got2, _ = h.wait()
+    np.testing.assert_array_equal(got2["k"], pay["k"])
+    assert conn.stats.transfers == 1
+    assert conn.stats.bytes_moved == n
+    conn.complete("r0@P0")
+    assert conn.staged_keys() == []
+    assert conn.pool.in_use == 0
+    conn.complete("r0@P0")             # idempotent: no over-release
+
+
+def test_capabilities_descriptor(conn):
+    caps = conn.capabilities()
+    assert caps.transport == conn.transport
+    assert caps.bandwidth_gbps > 0
+    assert caps.fixed_latency_s >= 0
+    assert caps.max_inflight >= 1
+    assert caps.chunk_bytes >= 0
+    assert caps.wire_seconds(0) == 0.0
+    assert caps.wire_seconds(2 * 10 ** 6) > caps.wire_seconds(10 ** 6)
+    assert conn.modeled_latency(10 ** 6) == caps.wire_seconds(10 ** 6)
+
+
+def test_register_peers(conn):
+    conn.register("P0", role="prefill")
+    conn.register("D0", role="decode")
+    conn.register("P0", role="prefill")       # idempotent
+    assert conn.peers() == ["D0", "P0"]
+
+
+def test_issue_read_unknown_key_raises(conn):
+    with pytest.raises(KeyError):
+        conn.issue_read("nope")
+
+
+def test_duplicate_stage_raises(conn):
+    conn.stage("k", _payload())
+    with pytest.raises(ValueError, match="already staged"):
+        conn.stage("k", _payload())
+
+
+# --------------------------------------------------------------------- #
+# conformance: failure paths
+# --------------------------------------------------------------------- #
+def test_wait_after_drop_raises(conn):
+    conn.stage("k1", _payload())
+    h = conn.issue_read("k1")
+    conn.drop("k1")
+    assert conn.pool.in_use == 0              # buffer freed on drop
+    with pytest.raises(TransferError, match="lost mid-stream"):
+        h.wait()
+    assert conn.inflight_reads() == 0         # failed read frees the channel
+
+
+def test_key_lost_mid_stream_second_reader(conn):
+    """A key dropped while another handle is in flight fails that handle
+    but leaves the connector healthy for the next transfer."""
+    conn.stage("gone", _payload(seed=1))
+    h = conn.issue_read("gone")
+    conn.drop("gone")
+    with pytest.raises(TransferError):
+        h.wait()
+    n = conn.stage("next", _payload(seed=2))
+    got, _ = conn.issue_read("next").wait()
+    np.testing.assert_array_equal(got["k"], _payload(seed=2)["k"])
+    conn.complete("next")
+    assert conn.pool.in_use == 0
+    assert n > 0
+
+
+def test_cancel_frees_channel_slot(conn):
+    conn.stage("c", _payload())
+    h = conn.issue_read("c")
+    assert conn.inflight_reads() == 1
+    h.cancel()
+    assert conn.inflight_reads() == 0
+    with pytest.raises(TransferError):
+        h.wait()
+    conn.drop("c")
+    # stats account delivered reads only — a cancelled read moved nothing
+    assert conn.stats.transfers == 0
+    assert conn.stats.bytes_moved == 0
+    assert conn.stats.modeled_seconds == 0.0
+
+
+def test_max_inflight_enforced():
+    for kind in BACKENDS:
+        c = _mk(kind, max_inflight=2)
+        for i in range(2):
+            c.stage(f"k{i}", _payload(seed=i))
+        h0 = c.issue_read("k0")
+        c.issue_read("k1")
+        with pytest.raises(TransferError, match="channel full"):
+            c.issue_read("k0")
+        h0.wait()                              # settles → slot frees
+        c.issue_read("k0")
+        c.close()
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_pool_exhaustion_under_concurrent_flights(kind):
+    """Staging footprints of concurrent flights share one pinned pool:
+    enough flights exhaust it (MemoryError), completing one admits the
+    next — and accounting returns to zero at the end."""
+    probe = _mk(kind)
+    per_entry = probe.stage("probe", _payload())
+    probe.close()
+
+    conn = _mk(kind, buffer_capacity_bytes=int(per_entry * 2.5))
+    conn.stage("f0", _payload(seed=0))
+    conn.stage("f1", _payload(seed=1))
+    h0 = conn.issue_read("f0")
+    h1 = conn.issue_read("f1")
+    with pytest.raises(MemoryError):
+        conn.stage("f2", _payload(seed=2))     # third concurrent flight
+    # drain one flight → capacity for the third
+    h0.wait()
+    conn.complete("f0")
+    conn.stage("f2", _payload(seed=2))
+    h1.wait()
+    conn.issue_read("f2").wait()
+    conn.complete("f1")
+    conn.complete("f2")
+    assert conn.pool.in_use == 0
+    assert conn.pool.high_water <= per_entry * 2.5
+    conn.close()
+
+
+def test_pinned_pool_over_release_raises():
+    pool = PinnedBufferPool(100)
+    pool.acquire(40)
+    pool.release(40)
+    with pytest.raises(ValueError, match="over-release"):
+        pool.release(1)
+    pool.acquire(30)
+    with pytest.raises(ValueError, match="over-release"):
+        pool.release(31)
+    assert pool.in_use == 30                  # failed release left state
+
+
+# --------------------------------------------------------------------- #
+# backend specifics
+# --------------------------------------------------------------------- #
+def test_shm_segment_readable_by_name():
+    """The staged entry really lives in an OS shared-memory segment: a
+    fresh attach by name (what another process would do) deserializes to
+    the staged payload."""
+    conn = SharedMemoryConnector()
+    pay = _payload(seed=7)
+    n = conn.stage("x", pay, {"m": 3})
+    seg = shared_memory.SharedMemory(name=conn.segment_name("x"))
+    try:
+        got, meta = pickle.loads(bytes(seg.buf[:n]))
+    finally:
+        seg.close()
+    np.testing.assert_array_equal(got["k"], pay["k"])
+    assert meta == {"m": 3}
+    conn.complete("x")
+    conn.close()
+
+
+def test_rdma_handle_completes_over_multiple_ticks():
+    """fixed_latency 1s, 0.6s of wire progress per tick → ready on the
+    second tick; wait() before that fast-forwards instead of hanging."""
+    conn = ModeledRDMAConnector(fixed_latency_s=1.0, tick_seconds=0.6,
+                                bandwidth_gbps=1e9)
+    conn.stage("a", _payload())
+    h = conn.issue_read("a")
+    assert not h.poll()
+    conn.tick()
+    assert not h.poll()
+    conn.tick()
+    assert h.poll()
+    h.wait()
+    conn.complete("a")
+
+    # forced-sync path: no ticks at all — wait() fast-forwards the clock
+    conn.stage("b", _payload(seed=1))
+    h2 = conn.issue_read("b")
+    assert not h2.poll()
+    h2.wait()
+    assert h2.poll()
+    conn.complete("b")
+    conn.close()
+
+
+def test_rdma_serializes_reads_on_the_link():
+    """Two reads issued back-to-back share the wire: the second becomes
+    ready only after the first's wire time has elapsed."""
+    conn = ModeledRDMAConnector(fixed_latency_s=0.5, tick_seconds=0.6,
+                                bandwidth_gbps=1e9)
+    conn.stage("a", _payload(seed=0))
+    conn.stage("b", _payload(seed=1))
+    ha = conn.issue_read("a")
+    hb = conn.issue_read("b")
+    conn.tick()                                # t=0.6: a ready, b not
+    assert ha.poll() and not hb.poll()
+    conn.tick()                                # t=1.2: b ready (0.5+0.5)
+    assert hb.poll()
+    conn.close()
+
+
+def test_inproc_zero_copy_and_instant():
+    conn = InProcessConnector(bandwidth_gbps=10.0)
+    pay = _payload()
+    n = conn.stage("z", pay)
+    h = conn.issue_read("z")
+    assert h.poll()                            # instant completion
+    got, _ = h.wait()
+    assert got["k"] is pay["k"]                # zero-copy: same buffer
+    assert conn.stats.modeled_seconds == pytest.approx(n / 10e9)
+    conn.close()
+
+
+# --------------------------------------------------------------------- #
+# streamed handoff conformance: bit-identical D pools per backend × wire
+# --------------------------------------------------------------------- #
+WIRES = [WireFormat("raw", "float32"), WireFormat("raw", "bfloat16"),
+         WireFormat("int8")]
+
+
+def _req(cfg, plen, rid="r0", max_new=4, seed=3):
+    rng = np.random.default_rng(seed)
+    return Request(req_id=rid,
+                   prompt=rng.integers(0, cfg.vocab_size,
+                                       plen).astype(np.int32),
+                   max_new_tokens=max_new)
+
+
+def _pair(cfg, params, vd):
+    vp = VendorProfile("B", block_size=8, layout="nhbd",
+                       kv_dtype="float32", tp=2)
+    p = Engine("P0", cfg, params, vp, num_blocks=64, max_batch=4,
+               max_seq_len=64, role="prefill")
+    d = Engine("D0", cfg, params, vd, num_blocks=64, max_batch=4,
+               max_seq_len=64, role="decode")
+    return p, d
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+@pytest.mark.parametrize("wire", WIRES, ids=lambda w: f"{w.kind}-{w.dtype}")
+def test_streamed_handoff_bitwise_equals_monolithic_per_backend(kind, wire):
+    """Acceptance: over every connector backend, the streamed chunked wire
+    (chunk 5, straddling the D vendor's 4-token blocks → RMW re-paging)
+    lands D pools bit-identical to the monolithic wire."""
+    cfg = TINY_FAMILIES["dense"]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    req = _req(cfg, plen=13)
+
+    p1, d_mono = _pair(cfg, params, vd)
+    pipe1 = DisaggPipeline(_mk(kind), wire)
+    pipe1.handoff(req, p1, d_mono)
+
+    p2, d_stream = _pair(cfg, params, vd)
+    pipe2 = DisaggPipeline(_mk(kind), wire)
+    meta = pipe2.handoff_streamed(req, p2, d_stream, chunk_tokens=5,
+                                  chunked_compute=False)
+    assert meta["chunks"] == 3                     # ceil(13 / 5)
+    assert meta["first_token"] == int(d_mono.last_token[0])
+
+    for a, b in zip(jax.tree.leaves(d_mono.caches),
+                    jax.tree.leaves(d_stream.caches)):
+        assert a.dtype == b.dtype
+        assert bool(jax.numpy.array_equal(a, b)), kind
+    np.testing.assert_array_equal(d_mono.block_tables, d_stream.block_tables)
+    np.testing.assert_array_equal(d_mono.seq_lens, d_stream.seq_lens)
+    assert d_mono.decode_step()[0][2] == d_stream.decode_step()[0][2]
+    assert pipe1.transfer.pool.in_use == 0
+    assert pipe2.transfer.pool.in_use == 0
+    pipe1.transfer.close()
+    pipe2.transfer.close()
+
+
+# --------------------------------------------------------------------- #
+# scheduler: decode runs while a chunk's wire transfer is in flight
+# --------------------------------------------------------------------- #
+def test_decode_step_runs_while_chunk_wire_in_flight():
+    """Acceptance: with ModeledRDMAConnector, handles span scheduler ticks
+    (fixed latency 1s, 0.45s of wire progress per tick → ~3 ticks per
+    chunk). A short request decodes in ticks where the long request's
+    chunk read is still on the wire — wire time and D-side re-page live in
+    separate tick budgets."""
+    cfg = TINY_FAMILIES["dense"]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    vp = VendorProfile("B", block_size=8, layout="nhbd",
+                       kv_dtype="float32", tp=2)
+    p0 = Engine("P0", cfg, params, vp, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="prefill")
+    p1 = Engine("P1", cfg, params, vp, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="prefill")
+    d = Engine("D0", cfg, params, vd, num_blocks=64, max_batch=4,
+               max_seq_len=64, role="decode")
+    conn = ModeledRDMAConnector(fixed_latency_s=1.0, tick_seconds=0.45,
+                                bandwidth_gbps=1e9)
+    pipe = DisaggPipeline(conn, WireFormat("raw", "float32"))
+    sched = GlobalScheduler(pipe, prefill_chunk=4, chunk_budget=1,
+                            repage_budget=1)
+    for e in (p0, p1, d):
+        sched.add_instance(e)
+
+    short_req = _req(cfg, plen=8, rid="short", max_new=10, seed=12)
+    long_req = _req(cfg, plen=24, rid="long", max_new=3, seed=11)
+    sched.submit(short_req)
+    sched.submit(long_req)
+
+    decoded_during_inflight_wire = 0
+    for _ in range(200):
+        emitted = sched.step()
+        short_decoded = any(r is short_req for r, _tok in emitted)
+        wire_busy = any(fl.handoff.pending_reads() > 0
+                        for fl in sched.inflight)
+        if short_decoded and wire_busy:
+            decoded_during_inflight_wire += 1
+        if sched.stats.finished == 2:
+            break
+
+    assert sched.stats.finished == 2
+    assert len(short_req.output_tokens) == 10
+    assert len(long_req.output_tokens) == 3
+    # the async wire kept chunks in flight across ticks while decode ran
+    assert decoded_during_inflight_wire >= 3
+    assert conn.stats.chunks == 2 + 6          # ceil(8/4) + ceil(24/4)
+    conn.close()
+
+
+def test_concurrent_flights_throttle_on_shared_channel():
+    """max_inflight=1 on a slow modeled wire: two flights share the single
+    read slot. can_send() checks the connector's *global* in-flight count,
+    so the second flight throttles (waits its turn) instead of hitting the
+    channel-full error and aborting — every request finishes with zero
+    requeues."""
+    cfg = TINY_FAMILIES["dense"]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    vp = VendorProfile("B", block_size=8, layout="nhbd",
+                       kv_dtype="float32", tp=2)
+    p0 = Engine("P0", cfg, params, vp, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="prefill")
+    p1 = Engine("P1", cfg, params, vp, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="prefill")
+    d = Engine("D0", cfg, params, vd, num_blocks=64, max_batch=4,
+               max_seq_len=64, role="decode")
+    conn = ModeledRDMAConnector(fixed_latency_s=1.0, tick_seconds=0.6,
+                                bandwidth_gbps=1e9, max_inflight=1)
+    pipe = DisaggPipeline(conn, WireFormat("raw", "float32"))
+    sched = GlobalScheduler(pipe, prefill_chunk=4, chunk_budget=1)
+    for e in (p0, p1, d):
+        sched.add_instance(e)
+    reqs = [_req(cfg, plen=12, rid=f"q{i}", max_new=3, seed=i)
+            for i in range(2)]
+    done = sched.run(reqs, max_ticks=400)
+    assert len(done) == 2
+    assert sched.stats.requeues == 0
+    assert all(len(r.output_tokens) == 3 for r in reqs)
+    conn.close()
+
+
+def test_planner_sources_wire_model_from_capabilities():
+    """The planner's communication operator library consumes the
+    connector's capabilities() descriptor instead of a bare bandwidth
+    constant: fixed per-read latency is additive, and streaming chunk size
+    honors the declared wire granularity."""
+    from repro.core.planner.simulator import (connector_chunk_tokens,
+                                              connector_wire_time)
+    flat = InProcessConnector(bandwidth_gbps=25.0).capabilities()
+    nbytes = 1e9
+    assert connector_wire_time(nbytes, flat) == pytest.approx(nbytes / 25e9)
+
+    rdma = ModeledRDMAConnector(bandwidth_gbps=25.0, fixed_latency_s=1e-3,
+                                chunk_bytes=1 << 20).capabilities()
+    assert connector_wire_time(nbytes, rdma) == \
+        pytest.approx(nbytes / 25e9 + 1e-3)
+    assert connector_wire_time(0, rdma) == 0.0
+
+    # granularity: 1 MiB preferred chunks at 2 KiB/token → 512-token chunks
+    assert connector_chunk_tokens(rdma, 2048) == 512
+    # no preference declared → caller's default stands
+    assert connector_chunk_tokens(flat, 2048, default=128) == 128
+    assert connector_chunk_tokens(None, 2048, default=128) == 128
+    # granularity below one token's wire bytes must not degenerate to
+    # 1-token chunks — fall back to the default regime
+    assert connector_chunk_tokens(rdma, (1 << 20) + 1, default=64) == 64
+
+
+def test_scheduler_requeue_increments_transfer_retries():
+    """Failure accounting is wire-visible: every scheduler requeue charges
+    TransferStats.retries (satellite: the field existed but was never
+    incremented)."""
+    cfg = TINY_FAMILIES["dense"]
+    params = M.init_params(jax.random.key(1), cfg)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    p, d = _pair(cfg, params, vd)
+    conn = InProcessConnector(buffer_capacity_bytes=64)   # chunk never fits
+    pipe = DisaggPipeline(conn, WireFormat("raw", "float32"))
+    sched = GlobalScheduler(pipe, prefill_chunk=4, max_retries=3)
+    sched.add_instance(p)
+    sched.add_instance(d)
+    sched.submit(_req(cfg, plen=16, rid="big", max_new=2))
+    for _ in range(10):
+        sched.step()
+    assert sched.stats.requeues == 3
+    assert conn.stats.retries == 3
+    assert conn.stats.retries == sched.stats.requeues
