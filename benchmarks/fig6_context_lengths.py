@@ -6,6 +6,10 @@ falls as context grows.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+
 from repro.core.planner.workload import PAPER_CONTEXTS, Workload
 
 from benchmarks.common import row, run
@@ -72,8 +76,27 @@ def main(duration: float = 120.0) -> dict:
     for k, v in checks.items():
         print(f"  [{'ok' if v else 'X'}] {k}")
     assert all(checks.values()), checks
-    return {"ttft": ttft, "capacity": cap}
+    return {"ttft": {f"{i}+{o}": v for (i, o), v in ttft.items()},
+            "tpot": {f"{i}+{o}": v for (i, o), v in tpot.items()},
+            "capacity_tok_s": {f"{i}+{o}": v for (i, o), v in cap.items()},
+            "sweep": {f"{i}+{o}": r.summary() for (i, o), r in out.items()},
+            "chunked_1024+1024": chk.summary(),
+            "connector_1024+1024": {"inproc": inp.summary(),
+                                    "rdma": rdma.summary()},
+            "duration_s": duration, "checks": checks}
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=120.0,
+                    help="simulated seconds per sweep point")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the results as JSON (CI perf-trajectory "
+                         "artifact)")
+    args = ap.parse_args()
+    results = main(duration=args.duration)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"results written to {args.json}")

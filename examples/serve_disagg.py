@@ -3,22 +3,177 @@ through the full disaggregated stack — heterogeneous P/D vendor profiles,
 global scheduler with load-aware routing, a mid-run D-instance failure
 (recovered via re-prefill), and elastic scale-up.
 
+Two runtimes share the stack:
+
+  * single-process (default): every engine lives in this process and the
+    `GlobalScheduler` pumps the P-side flight loop and D-side decode loop
+    in one tick loop.
+  * ``--two-process``: the P and D engines run in *separate OS processes*
+    (``repro.serving.multiproc``), control plane over multiprocessing
+    queues, KV data plane over SharedMemoryConnector segments. Requires
+    ``--connector shm``.
+
+``--parity`` runs both runtimes back to back and asserts token-exact
+output — the acceptance check the CI two-process-smoke job enforces.
+
   PYTHONPATH=src python examples/serve_disagg.py [--requests 24]
+  PYTHONPATH=src python examples/serve_disagg.py --two-process --connector shm
+  PYTHONPATH=src python examples/serve_disagg.py --two-process --connector shm --parity
 """
 import argparse
 import time
 
 import numpy as np
-import jax
 
 from repro.configs.base import ConnectorConfig, ModelConfig
 from repro.core.compat.precision import WireFormat
-from repro.core.disagg import DisaggPipeline
-from repro.models import model as M
-from repro.serving.engine import Engine, VendorProfile
+from repro.serving.engine import VendorProfile
 from repro.serving.request import Request
-from repro.serving.scheduler import GlobalScheduler
-from repro.serving.server import Server
+
+# ~100M params: 16L × d640 (GQA 10/5), vocab 16k
+CFG = ModelConfig(name="demo-100m", family="dense", num_layers=16,
+                  d_model=640, num_heads=10, num_kv_heads=5, head_dim=64,
+                  d_ff=2560, vocab_size=16384, param_dtype="float32",
+                  compute_dtype="float32")
+# tp must divide the model's KV heads (5) — the KV shards on the wire
+# are per-TP-rank slices of the head axis
+VENDOR_P = VendorProfile("vendorB", block_size=16, layout="nhbd",
+                         kv_dtype="float32", tp=5, hardware="gpu-b")
+VENDOR_D = VendorProfile("vendorA", block_size=8, layout="nbhd",
+                         kv_dtype="float32", tp=1, hardware="gpu-a")
+PARAMS_SEED = 0
+
+
+def build_requests(n: int, max_new: int):
+    rng = np.random.default_rng(0)
+    return [Request(req_id=f"req-{i:03d}",
+                    prompt=rng.integers(0, CFG.vocab_size,
+                                        int(rng.integers(16, 64))
+                                        ).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def run_single(args, faults: bool):
+    """Single-process runtime: all engines in this process."""
+    import jax
+
+    from repro.core.disagg import DisaggPipeline
+    from repro.models import model as M
+    from repro.serving.engine import Engine
+    from repro.serving.scheduler import GlobalScheduler
+    from repro.serving.server import Server
+
+    n = sum(int(np.prod(p.shape)) for p in
+            jax.tree.leaves(M.abstract_params(CFG)))
+    print(f"model: {CFG.name} ({n/1e6:.0f}M params)")
+    params = M.init_params(jax.random.key(PARAMS_SEED), CFG)
+
+    mk = lambda name, vendor, role: Engine(
+        name, CFG, params, vendor, num_blocks=512, max_batch=8,
+        max_seq_len=256, role=role)
+    p0 = mk("P0", VENDOR_P, "prefill")
+    d0 = mk("D0", VENDOR_D, "decode")
+
+    connector = ConnectorConfig(kind=args.connector,
+                                bandwidth_gbps=25.0).build()
+    caps = connector.capabilities()
+    print(f"KV connector: {caps.transport} ({caps.bandwidth_gbps:g} Gbps, "
+          f"{caps.fixed_latency_s*1e6:g} µs/read, "
+          f"max {caps.max_inflight} in flight, "
+          f"{'cross-process' if caps.cross_process else 'in-process'})")
+    pipeline = DisaggPipeline(connector, WireFormat("raw", "float32"))
+    # chunked streaming: each prefill chunk's KV hits the wire while the
+    # next chunk computes, and decode steps interleave with long prefills
+    sched = GlobalScheduler(pipeline, prefill_chunk=args.prefill_chunk)
+    for e in (p0, d0) + ((mk("D1", VENDOR_D, "decode"),) if faults else ()):
+        sched.add_instance(e)
+    server = Server(sched)
+
+    reqs = build_requests(args.requests, args.max_new)
+    print(f"serving {len(reqs)} requests "
+          f"({'1P+2D, fault injection on' if faults else '1P+1D'}) ...")
+    for r in reqs:
+        server.submit(r)
+    t0 = time.perf_counter()
+    tick = 0
+    failed = scaled = False
+    while sched.stats.finished + sched.stats.failed < len(reqs) \
+            and tick < 5000:
+        sched.step()
+        tick += 1
+        if faults and tick == 6 and not failed:   # kill a decode node mid-run
+            print("  !! injecting D0 failure (volatile KV lost)")
+            d0.fail()
+            failed = True
+        if faults and tick == 14 and not scaled:   # elastic scale-up
+            print("  ++ joining D2 (elastic scale-up)")
+            sched.add_instance(mk("D2", VENDOR_D, "decode"))
+            scaled = True
+    wall = time.perf_counter() - t0
+
+    done = [r for r in reqs if r.done]
+    total_tokens = sum(len(r.output_tokens) for r in done)
+    print(f"\nfinished {len(done)}/{len(reqs)} requests, "
+          f"{total_tokens} tokens in {wall:.1f}s "
+          f"({total_tokens / wall:.0f} tok/s on CPU)")
+    print(f"requeues after failure: {sched.stats.requeues}")
+    print(f"P dispatches: {dict(sched.stats.p_dispatches)}")
+    print(f"D dispatches: {dict(sched.stats.d_dispatches)}")
+    _print_wire(pipeline.transfer.stats)
+    assert len(done) == len(reqs), "lost requests!"
+    sample = reqs[0]
+    print(f"sample stream {sample.req_id}: {sample.output_tokens[:12]}...")
+    connector.close()                 # free staged buffers / shm segments
+    return {r.req_id: list(r.output_tokens) for r in reqs}
+
+
+def run_two_process(args):
+    """Two-process runtime: P and D engines in separate OS processes."""
+    import os
+
+    from repro.serving.multiproc import EngineSpec, serve_two_process
+
+    if args.connector != "shm":
+        raise SystemExit("--two-process needs the cross-process staging "
+                         "backend: pass --connector shm")
+    p_spec = EngineSpec("P0", CFG, VENDOR_P, params_seed=PARAMS_SEED,
+                        num_blocks=512, max_batch=8, max_seq_len=256,
+                        role="prefill")
+    d_spec = EngineSpec("D0", CFG, VENDOR_D, params_seed=PARAMS_SEED,
+                        num_blocks=512, max_batch=8, max_seq_len=256,
+                        role="decode")
+    reqs = build_requests(args.requests, args.max_new)
+    print(f"serving {len(reqs)} requests on 1P + 1D "
+          f"(separate OS processes; parent pid {os.getpid()}) ...")
+    t0 = time.perf_counter()
+    tokens, rt = serve_two_process(p_spec, d_spec, reqs,
+                                   prefill_chunk=args.prefill_chunk,
+                                   max_wall_s=600.0)
+    wall = time.perf_counter() - t0
+    total_tokens = sum(len(t) for t in tokens.values())
+    print(f"\nfinished {rt.stats.finished}/{len(reqs)} requests, "
+          f"{total_tokens} tokens in {wall:.1f}s "
+          f"({total_tokens / wall:.0f} tok/s on CPU)")
+    print(f"worker pids: {rt.worker_pids} (parent {os.getpid()})")
+    _print_wire(rt.transfer_stats)
+    assert rt.stats.finished == len(reqs), "lost requests!"
+    return tokens
+
+
+def _print_wire(ts) -> None:
+    print(f"KV wire: {ts.transfers} transfers ({ts.chunks} streamed chunks), "
+          f"{ts.bytes_moved/1e6:.1f} MB, "
+          f"peak pinned buffer {ts.peak_buffer_bytes/1e6:.1f} MB")
+    if ts.chunks and ts.overlap_modeled_seconds:
+        print(f"overlap (modeled): {ts.overlap_modeled_seconds*1e6:.1f} µs of "
+              f"{ts.modeled_seconds*1e6:.1f} µs wire time hidden under "
+              f"chunk compute")
+    if ts.wall_handoff_seconds:
+        print(f"overlap (measured): {ts.wall_overlap_seconds*1e3:.1f} ms of "
+              f"wire time hidden under prefill compute across "
+              f"{ts.wall_handoff_seconds*1e3:.1f} ms of total handoff wall "
+              f"time")
 
 
 def main():
@@ -33,94 +188,29 @@ def main():
                     help="KV-transport backend: in-process (zero-copy), "
                          "shared-memory (real cross-process staging), or "
                          "modeled-RDMA (async multi-tick completion)")
+    ap.add_argument("--two-process", action="store_true",
+                    help="run the P and D engines in separate OS processes "
+                         "(multiproc runtime; requires --connector shm)")
+    ap.add_argument("--parity", action="store_true",
+                    help="run single-process then two-process and assert "
+                         "token-exact output (implies --two-process)")
     args = ap.parse_args()
 
-    # ~100M params: 16L × d640 (GQA 10/5), vocab 16k
-    cfg = ModelConfig(name="demo-100m", family="dense", num_layers=16,
-                      d_model=640, num_heads=10, num_kv_heads=5, head_dim=64,
-                      d_ff=2560, vocab_size=16384, param_dtype="float32",
-                      compute_dtype="float32")
-    n = sum(int(np.prod(p.shape)) for p in
-            jax.tree.leaves(M.abstract_params(cfg)))
-    print(f"model: {cfg.name} ({n/1e6:.0f}M params)")
-    params = M.init_params(jax.random.key(0), cfg)
-
-    # tp must divide the model's KV heads (5) — the KV shards on the wire
-    # are per-TP-rank slices of the head axis
-    vendor_p = VendorProfile("vendorB", block_size=16, layout="nhbd",
-                             kv_dtype="float32", tp=5, hardware="gpu-b")
-    vendor_d = VendorProfile("vendorA", block_size=8, layout="nbhd",
-                             kv_dtype="float32", tp=1, hardware="gpu-a")
-
-    mk = lambda name, vendor, role: Engine(
-        name, cfg, params, vendor, num_blocks=512, max_batch=8,
-        max_seq_len=256, role=role)
-    p0 = mk("P0", vendor_p, "prefill")
-    d0 = mk("D0", vendor_d, "decode")
-    d1 = mk("D1", vendor_d, "decode")
-
-    connector = ConnectorConfig(kind=args.connector,
-                                bandwidth_gbps=25.0).build()
-    caps = connector.capabilities()
-    print(f"KV connector: {caps.transport} ({caps.bandwidth_gbps:g} Gbps, "
-          f"{caps.fixed_latency_s*1e6:g} µs/read, "
-          f"max {caps.max_inflight} in flight, "
-          f"{'cross-process' if caps.cross_process else 'in-process'})")
-    pipeline = DisaggPipeline(connector, WireFormat("raw", "float32"))
-    # chunked streaming: each prefill chunk's KV hits the wire while the
-    # next chunk computes, and decode steps interleave with long prefills
-    sched = GlobalScheduler(pipeline, prefill_chunk=args.prefill_chunk)
-    for e in (p0, d0, d1):
-        sched.add_instance(e)
-    server = Server(sched)
-
-    rng = np.random.default_rng(0)
-    reqs = [Request(req_id=f"req-{i:03d}",
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        int(rng.integers(16, 64))
-                                        ).astype(np.int32),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
-
-    print(f"serving {len(reqs)} requests on 1P + 2D ...")
-    for r in reqs:
-        server.submit(r)
-    t0 = time.perf_counter()
-    tick = 0
-    failed = scaled = False
-    while sched.stats.finished < len(reqs) and tick < 5000:
-        sched.step()
-        tick += 1
-        if tick == 6 and not failed:          # kill a decode node mid-run
-            print("  !! injecting D0 failure (volatile KV lost)")
-            d0.fail()
-            failed = True
-        if tick == 14 and not scaled:          # elastic scale-up
-            print("  ++ joining D2 (elastic scale-up)")
-            sched.add_instance(mk("D2", vendor_d, "decode"))
-            scaled = True
-    wall = time.perf_counter() - t0
-
-    done = [r for r in reqs if r.done]
-    total_tokens = sum(len(r.output_tokens) for r in done)
-    print(f"\nfinished {len(done)}/{len(reqs)} requests, "
-          f"{total_tokens} tokens in {wall:.1f}s "
-          f"({total_tokens / wall:.0f} tok/s on CPU)")
-    print(f"requeues after failure: {sched.stats.requeues}")
-    print(f"P dispatches: {dict(sched.stats.p_dispatches)}")
-    print(f"D dispatches: {dict(sched.stats.d_dispatches)}")
-    ts = pipeline.transfer.stats
-    print(f"KV wire: {ts.transfers} transfers ({ts.chunks} streamed chunks), "
-          f"{ts.bytes_moved/1e6:.1f} MB, "
-          f"peak pinned buffer {ts.peak_buffer_bytes/1e6:.1f} MB")
-    if ts.chunks:
-        print(f"overlap: {ts.overlap_modeled_seconds*1e6:.1f} µs of "
-              f"{ts.modeled_seconds*1e6:.1f} µs modeled wire time hidden "
-              f"under chunk compute")
-    assert len(done) == len(reqs), "lost requests!"
-    sample = reqs[0]
-    print(f"sample stream {sample.req_id}: {sample.output_tokens[:12]}...")
-    connector.close()                 # free staged buffers / shm segments
+    if args.parity:
+        print("== parity: single-process reference ==")
+        ref = run_single(args, faults=False)
+        print("\n== parity: two-process runtime ==")
+        two = run_two_process(args)
+        assert set(ref) == set(two), (sorted(ref), sorted(two))
+        for rid in sorted(ref):
+            assert ref[rid] == two[rid], \
+                f"{rid}: single={ref[rid]} two-process={two[rid]}"
+        print(f"\nPARITY OK: {len(ref)} requests token-exact across "
+              "single-process and two-process runtimes")
+    elif args.two_process:
+        run_two_process(args)
+    else:
+        run_single(args, faults=True)
 
 
 if __name__ == "__main__":

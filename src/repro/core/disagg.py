@@ -35,6 +35,7 @@ what the paper's Figs. 9–10 compare against.
 from __future__ import annotations
 
 import collections
+import time
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
@@ -328,10 +329,15 @@ class StreamedHandoff:
         self.chunks_sent = 0
         self.chunks_repaged = 0
         self.bytes = 0
-        self._pending: Deque[Tuple[str, TransferHandle, float]] = \
+        self._pending: Deque[Tuple[str, TransferHandle, float, float]] = \
             collections.deque()
         self._chunk_modeled: List[float] = []
         self._chunk_compute: List[float] = []
+        # wall-clock (measured) handoff timings — time.monotonic so the
+        # same accounting is comparable across OS processes on one host
+        self._t_first_stage: Optional[float] = None
+        self._t_last_repage: Optional[float] = None
+        self._chunk_wall_pending: List[float] = []
         self._closed = False
 
     # -- wire side -------------------------------------------------------- #
@@ -362,6 +368,8 @@ class StreamedHandoff:
         wire_chunk = self.pipeline.encode_chunk(self.p_engine, chunk)
         key = f"{self.req.req_id}@{self.p_engine.name}" \
               f"#t{self.req.retries}c{self.chunks_sent}"
+        if self._t_first_stage is None:
+            self._t_first_stage = time.monotonic()
         nbytes = tr.stage(key, wire_chunk, self.meta)
         try:
             handle = tr.issue_read(key)
@@ -369,7 +377,8 @@ class StreamedHandoff:
             tr.drop(key)
             raise
         self._pending.append((key, handle,
-                              chunk.get("compute_seconds", 0.0)))
+                              chunk.get("compute_seconds", 0.0),
+                              time.monotonic()))
         self.chunks_sent += 1
         self.bytes += nbytes
         return nbytes
@@ -380,7 +389,7 @@ class StreamedHandoff:
         unconditionally when ``force``). Returns True if it re-paged."""
         if not self._pending:
             return False
-        key, handle, compute_s = self._pending[0]
+        key, handle, compute_s, t_issue = self._pending[0]
         if not force and not handle.poll():
             return False
         if self.d_engine.failed:
@@ -393,6 +402,8 @@ class StreamedHandoff:
         tr.stats.chunks += 1
         self._chunk_modeled.append(tr.modeled_latency(handle.nbytes))
         self._chunk_compute.append(compute_s)
+        self._t_last_repage = time.monotonic()
+        self._chunk_wall_pending.append(self._t_last_repage - t_issue)
         self._pending.popleft()
         self.chunks_repaged += 1
         return True
@@ -441,6 +452,17 @@ class StreamedHandoff:
             tr.stats.overlap_modeled_seconds += sum(
                 min(xfer, comp) for xfer, comp in
                 zip(self._chunk_modeled[:-1], self._chunk_compute[1:]))
+            # measured counterpart: wall time a chunk actually spent pending
+            # on the wire, capped by the next chunk's compute wall time. On
+            # an instant in-process wire this is ~0 (nothing truly ran
+            # concurrently); in the two-process runtime the launcher
+            # measures real cross-process concurrency instead.
+            tr.stats.wall_overlap_seconds += sum(
+                min(pend, comp) for pend, comp in
+                zip(self._chunk_wall_pending[:-1], self._chunk_compute[1:]))
+        if self._t_first_stage is not None and self._t_last_repage is not None:
+            tr.stats.wall_handoff_seconds += \
+                self._t_last_repage - self._t_first_stage
         self._closed = True
         return {"first_token": first_token, "seq_len": self.seq_len,
                 "tp_p": self.meta["tp_p"], "wire": self.pipeline.wire,
@@ -454,7 +476,7 @@ class StreamedHandoff:
         self._closed = True
         tr = self.pipeline.transfer
         while self._pending:
-            key, handle, _comp = self._pending.popleft()
+            key, handle, _comp, _t = self._pending.popleft()
             handle.cancel()
             tr.drop(key)
         self.d_engine.abort_reservation(self.slot)

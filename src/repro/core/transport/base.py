@@ -55,6 +55,13 @@ class TransferStats:
     modeled_seconds: float = 0.0    # fixed latency + bytes / modeled bandwidth
     overlap_modeled_seconds: float = 0.0  # modeled wire time hidden under
     #                                       the next chunk's prefill compute
+    # wall-clock (measured, not modeled) handoff timings. In one process a
+    # chunk on an instant wire re-pages in the tick it was sent, so measured
+    # overlap is ~0; across real P/D processes the wire interval genuinely
+    # runs concurrent with the next chunk's prefill compute and these fields
+    # report what was actually hidden.
+    wall_handoff_seconds: float = 0.0   # first stage → last re-page, per flight
+    wall_overlap_seconds: float = 0.0   # measured wire time under prefill compute
     peak_buffer_bytes: int = 0
     retries: int = 0                # scheduler requeues charged to the wire
 
@@ -62,6 +69,17 @@ class TransferStats:
     def exposed_modeled_seconds(self) -> float:
         """Modeled wire time left on the critical path after overlap."""
         return self.modeled_seconds - self.overlap_modeled_seconds
+
+    def merge(self, other: "TransferStats") -> None:
+        """Fold another connector's counters into this one (the two-process
+        runtime aggregates the P-side and D-side connectors' stats)."""
+        for f in dataclasses.fields(self):
+            if f.name == "peak_buffer_bytes":
+                self.peak_buffer_bytes = max(self.peak_buffer_bytes,
+                                             other.peak_buffer_bytes)
+            else:
+                setattr(self, f.name,
+                        getattr(self, f.name) + getattr(other, f.name))
 
 
 class PinnedBufferPool:

@@ -7,15 +7,47 @@ same stage/attach/read shape a real RDMA or NVLink-peer wire has, minus
 the NIC. The pinned pool accounts the serialized footprint (what actually
 sits in the shared segment), and reads return fresh deserialized arrays
 (no aliasing with the P side, as across a real process boundary).
+
+Two-process protocol (the multiproc serving runtime): the P side stages
+and ships ``export_descriptor(key)`` over the control plane; the D side
+``adopt_segment``\\ s the descriptor into *its own* connector — attaching
+the OS segment by name, charging its pinned receive pool — after which
+``issue_read``/``wait``/``complete`` behave exactly as for locally staged
+keys. D's ``complete`` only detaches (the creator owns the segment and
+unlinks on its own ``complete``, once told the chunk was consumed).
+
+Segment lifetime is guarded by a ``weakref.finalize`` cleanup: a process
+that drops its connector without calling ``drop()``/``close()`` — or exits
+normally mid-stream — unlinks every segment it created (and detaches every
+segment it adopted) at GC/atexit time, so no named segments outlive the
+process. Only a hard kill (``os._exit``/SIGKILL) can skip this; the
+two-process launcher covers that path by unlinking a crashed worker's
+outstanding segments from the parent.
 """
 from __future__ import annotations
 
 import dataclasses
 import pickle
+import weakref
 from multiprocessing import shared_memory
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Set, Tuple
 
 from repro.core.transport.base import KVConnector
+
+
+def _cleanup_segments(segments: Dict[str, shared_memory.SharedMemory],
+                      adopted: Set[str]) -> None:
+    """Finalizer body (must not reference the connector): close every
+    segment, unlink the ones this process created."""
+    for key, seg in list(segments.items()):
+        try:
+            seg.close()
+            if key not in adopted:
+                seg.unlink()
+        except Exception:
+            pass
+    segments.clear()
+    adopted.clear()
 
 
 class SharedMemoryConnector(KVConnector):
@@ -28,6 +60,11 @@ class SharedMemoryConnector(KVConnector):
                          buffer_capacity_bytes=buffer_capacity_bytes,
                          fixed_latency_s=0.0, max_inflight=max_inflight)
         self._segments: Dict[str, shared_memory.SharedMemory] = {}
+        self._adopted: Set[str] = set()
+        # leak guard: runs at GC *and* interpreter exit, whichever first —
+        # a process dying without drop()/close() must not strand OS segments
+        self._finalizer = weakref.finalize(
+            self, _cleanup_segments, self._segments, self._adopted)
 
     def capabilities(self):
         return dataclasses.replace(super().capabilities(),
@@ -37,6 +74,36 @@ class SharedMemoryConnector(KVConnector):
         """OS-level name of a staged key's segment — what a reader in
         another process attaches to."""
         return self._segments[key].name
+
+    # -- cross-process descriptor plane ----------------------------------- #
+    def export_descriptor(self, key: str) -> Dict[str, Any]:
+        """Control-plane handle for a staged key: everything a connector in
+        another process needs to ``adopt_segment`` and read it."""
+        return {"key": key, "segment": self._segments[key].name,
+                "nbytes": self._sizes[key]}
+
+    def adopt_segment(self, key: str, segment: str, nbytes: int) -> int:
+        """Attach a segment staged by a connector in *another* process so
+        ``issue_read(key)`` works locally. Charges this side's pinned pool
+        (the receive buffer); ``complete(key)`` detaches without unlinking —
+        the creating process owns the segment's lifetime."""
+        if key in self._sizes:
+            raise ValueError(f"transfer key {key!r} already staged")
+        # NOTE: attaching re-registers the name with the resource tracker,
+        # which spawn-children share with the launcher — a set, so the
+        # creator's eventual unlink unregisters it exactly once. No manual
+        # unregister here: it would strip the creator's registration.
+        seg = shared_memory.SharedMemory(name=segment)
+        try:
+            self.pool.acquire(nbytes)
+        except Exception:
+            seg.close()
+            raise
+        self._segments[key] = seg
+        self._adopted.add(key)
+        self._sizes[key] = nbytes
+        self.stats.peak_buffer_bytes = self.pool.high_water
+        return nbytes
 
     # -- storage hooks ---------------------------------------------------- #
     def _put(self, key: str, payload, meta: Dict[str, Any]) -> int:
@@ -65,9 +132,17 @@ class SharedMemoryConnector(KVConnector):
 
     def _evict(self, key: str) -> None:
         seg = self._segments.pop(key, None)
-        if seg is not None:
-            seg.close()
-            try:
-                seg.unlink()
-            except FileNotFoundError:
-                pass
+        if seg is None:
+            return
+        seg.close()
+        if key in self._adopted:               # reader side: creator unlinks
+            self._adopted.discard(key)
+            return
+        try:
+            seg.unlink()
+        except FileNotFoundError:
+            pass
+
+    def close(self) -> None:
+        super().close()
+        self._finalizer()          # idempotent: nothing left, detach atexit

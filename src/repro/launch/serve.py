@@ -45,14 +45,17 @@ def compile_programs(arch: str, shape: str, multi_pod: bool) -> None:
               f"{tot/2**30:.2f} GiB/chip")
 
 
-def demo(connector: str = "inproc") -> None:
+def demo(connector: str = "inproc", two_process: bool = False) -> None:
     import subprocess
     import sys
     root = os.path.join(os.path.dirname(__file__), "..", "..", "..")
-    subprocess.run([sys.executable,
-                    os.path.join(root, "examples", "serve_disagg.py"),
-                    "--requests", "8", "--max-new", "8",
-                    "--connector", connector], check=True)
+    cmd = [sys.executable,
+           os.path.join(root, "examples", "serve_disagg.py"),
+           "--requests", "8", "--max-new", "8",
+           "--connector", connector]
+    if two_process:
+        cmd.append("--two-process")
+    subprocess.run(cmd, check=True)
 
 
 def main() -> None:
@@ -64,9 +67,12 @@ def main() -> None:
     ap.add_argument("--connector", default="inproc",
                     choices=["inproc", "shm", "rdma"],
                     help="KV-transport backend for the --demo serving loop")
+    ap.add_argument("--two-process", action="store_true",
+                    help="--demo only: run the P and D engines in separate "
+                         "OS processes (requires --connector shm)")
     args = ap.parse_args()
     if args.demo:
-        demo(args.connector)
+        demo(args.connector, args.two_process)
     else:
         compile_programs(args.arch, args.shape, args.multi_pod)
 

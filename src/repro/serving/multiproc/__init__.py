@@ -1,0 +1,16 @@
+"""Two-process disaggregated P/D serving runtime.
+
+A parent launcher spawns one P-instance process and one D-instance
+process (``multiprocessing`` spawn context), each running its own
+``Engine`` event loop; the control plane rides ``multiprocessing`` queues
+and the KV data plane rides ``SharedMemoryConnector`` segments (staged by
+the P process, adopted + read by the D process). See ``launcher.py`` for
+the protocol diagram.
+"""
+from repro.serving.multiproc.launcher import (TwoProcessRuntime,  # noqa: F401
+                                              serve_two_process)
+from repro.serving.multiproc.messages import (EngineSpec,  # noqa: F401
+                                              WorkerSpec)
+
+__all__ = ["TwoProcessRuntime", "serve_two_process", "EngineSpec",
+           "WorkerSpec"]

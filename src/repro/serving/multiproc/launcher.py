@@ -1,0 +1,531 @@
+"""Two-process disaggregated serving runtime (parent/launcher side).
+
+``TwoProcessRuntime`` spawns one P-instance process and one D-instance
+process (``multiprocessing.get_context("spawn")``), each running its own
+``Engine`` event loop (:mod:`p_worker`, :mod:`d_worker`). The parent is
+the control plane — request submission, chunk-ready notifications,
+completion, clean shutdown, and crash detection — over ``multiprocessing``
+queues; the KV data plane is ``SharedMemoryConnector`` segments staged by
+P and adopted + read by D, so model bytes never transit a queue.
+
+    parent (control plane, this module)
+      │ SubmitPrefill              │ BeginStream / ChunkReady / Finalize
+      ▼                            ▼
+    ┌────────────┐  shm segments ┌────────────┐
+    │ P process  │ ─────────────▶│ D process  │
+    │ prefill +  │  (data plane) │ repage +   │
+    │ stage      │               │ decode     │
+    └────────────┘               └────────────┘
+      │ ChunkStaged/PrefillDone    │ ChunkRepaged/Token/Done/StreamFailed
+      └────────────▶ parent ◀──────┘
+
+Fault handling mirrors the single-process ``GlobalScheduler``: a P crash
+mid-stream aborts the D-side reservation, strands-then-unlinks the dead
+attempt's segments, and requeues the request (``TransferStats.retries``);
+a D crash loses all volatile KV, so every unfinished request re-prefills
+with its generated prefix appended. Crashed workers are respawned (up to
+``max_respawns``) so serving continues.
+
+The parent also *measures* the handoff: every ``ChunkStaged`` /
+``ChunkRepaged`` carries ``time.monotonic`` intervals (comparable across
+processes on one host), from which the launcher computes true wall-clock
+wire/compute overlap per flight — ``TransferStats.wall_overlap_seconds``
+— something a single process can only model.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import multiprocessing as mp
+import queue
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.transport.base import TransferStats
+from repro.serving.multiproc import d_worker, p_worker
+from repro.serving.multiproc.messages import (AbortStream, BeginStream,
+                                              ChunkReady, ChunkRepaged,
+                                              ChunkStaged, EngineSpec,
+                                              FinalizeStream, Heartbeat,
+                                              Hello, PrefillDone,
+                                              PrefillFailed, ReleaseStaged,
+                                              RequestDone, Shutdown,
+                                              StreamFailed, SubmitPrefill,
+                                              TokenEmitted, WorkerSpec,
+                                              WorkerStats)
+from repro.serving.request import Request, State
+from repro.serving.scheduler import SchedulerStats, requeue_for_retry
+
+
+def _unlink_segment(name: str) -> None:
+    """Best-effort unlink of a stranded segment (crashed P's staging)."""
+    from multiprocessing import shared_memory
+    try:
+        seg = shared_memory.SharedMemory(name=name)
+    except FileNotFoundError:
+        return
+    try:
+        seg.close()
+        seg.unlink()
+    except FileNotFoundError:
+        pass
+
+
+def _interval_overlap(a: Tuple[float, float],
+                      spans: List[Tuple[float, float]]) -> float:
+    """Length of interval ``a`` covered by the (disjoint) ``spans``."""
+    return sum(max(0.0, min(a[1], s1) - max(a[0], s0)) for s0, s1 in spans)
+
+
+def _union(spans: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    """Merge intervals into a sorted disjoint union."""
+    merged: List[Tuple[float, float]] = []
+    for s0, s1 in sorted(spans):
+        if merged and s0 <= merged[-1][1]:
+            merged[-1] = (merged[-1][0], max(merged[-1][1], s1))
+        elif s1 > s0:
+            merged.append((s0, s1))
+    return merged
+
+
+@dataclasses.dataclass
+class _FlightRecord:
+    """Parent-side view of one dispatched request."""
+    req: Request
+    attempt: int
+    p_gen: int = 0                        # P spawn generation at dispatch
+    phase: str = "prefill"                # prefill → decode
+    prefill_done: bool = False
+    # key → segment of chunks staged but not yet released back to P
+    outstanding: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # key → segment of EVERY chunk this attempt ever staged (never popped;
+    # crash cleanup unlinks from here, since a release sent to a dead P is
+    # lost and `outstanding` alone under-counts)
+    segments: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # measured wall-clock intervals (monotonic), per chunk index order
+    stage_spans: List[Tuple[float, float]] = dataclasses.field(
+        default_factory=list)
+    compute_spans: List[Tuple[float, float]] = dataclasses.field(
+        default_factory=list)
+    repage_spans: Dict[str, Tuple[float, float]] = dataclasses.field(
+        default_factory=dict)
+    chunk_keys: List[str] = dataclasses.field(default_factory=list)
+
+
+class TwoProcessRuntime:
+    """1 P-process + 1 D-process disaggregated serving loop."""
+
+    def __init__(self, p_spec: EngineSpec, d_spec: EngineSpec, *,
+                 wire=None,
+                 connector_kwargs: Optional[Dict[str, Any]] = None,
+                 prefill_chunk: Optional[int] = 16,
+                 max_retries: int = 3,
+                 stall_timeout_s: float = 120.0,
+                 max_respawns: int = 4,
+                 fault_exit_after_chunks: Optional[int] = None):
+        from repro.core.compat.precision import WireFormat
+        wire = wire or WireFormat("raw", "float32")
+        ck = dict(connector_kwargs or {})
+        self.p_spec = WorkerSpec(engine=p_spec, wire=wire,
+                                 connector_kwargs=ck,
+                                 prefill_chunk=prefill_chunk,
+                                 fault_exit_after_chunks=fault_exit_after_chunks)
+        self.d_spec = WorkerSpec(engine=d_spec, wire=wire,
+                                 connector_kwargs=ck,
+                                 prefill_chunk=prefill_chunk)
+        self.max_retries = max_retries
+        self.stall_timeout_s = stall_timeout_s
+        self.max_respawns = max_respawns
+        self.stats = SchedulerStats()
+        self.transfer_stats = TransferStats()     # parent-measured + merged
+        self.worker_stats: Dict[str, Dict[str, float]] = {}
+        self.worker_pids: Dict[str, int] = {}
+        self.stream_failures: List[Tuple[str, str]] = []
+        self.crashes: Dict[str, int] = {"P": 0, "D": 0}
+        self._ctx = mp.get_context("spawn")
+        self._procs: Dict[str, mp.Process] = {}
+        self._cmd_qs: Dict[str, Any] = {}
+        self._evt_q = None
+        self._gen: Dict[str, int] = {"P": 0, "D": 0}   # spawn generations
+        # seq → segment of releases sent to P but not yet acked. P
+        # piggybacks the highest seq it has processed on its messages
+        # home; entries at or below that ack are pruned. On a P crash the
+        # remainder is unlinked directly — a release queued to a dead
+        # process frees nothing.
+        self._released: Dict[int, str] = {}
+        self._release_seq = 0
+        self._last_seen: Dict[str, float] = {}
+        self._pending: collections.deque = collections.deque()
+        self._active: Dict[str, _FlightRecord] = {}
+        self._requests: Dict[str, Request] = {}
+        self._final_stats_expected = 0
+
+    # -- process lifecycle ------------------------------------------------- #
+    def start(self, spawn_timeout_s: float = 120.0) -> None:
+        self._evt_q = self._ctx.Queue()
+        self._spawn("P")
+        self._spawn("D")
+        self._await_hello({"P", "D"}, spawn_timeout_s)
+
+    def _spawn(self, side: str, fault: bool = True) -> None:
+        self._gen[side] += 1
+        spec = self.p_spec if side == "P" else self.d_spec
+        if side == "P" and not fault:
+            spec = dataclasses.replace(spec, fault_exit_after_chunks=None)
+            self.p_spec = spec                    # one injected crash only
+        cmd_q = self._ctx.Queue()
+        target = p_worker.p_main if side == "P" else d_worker.d_main
+        proc = self._ctx.Process(target=target,
+                                 args=(spec, cmd_q, self._evt_q),
+                                 daemon=True, name=f"repro-{side.lower()}")
+        proc.start()
+        self._procs[side] = proc
+        self._cmd_qs[side] = cmd_q
+        self._last_seen[side] = time.monotonic()
+
+    def _await_hello(self, sides: set, timeout_s: float) -> None:
+        deadline = time.monotonic() + timeout_s
+        waiting = set(sides)
+        while waiting:
+            if time.monotonic() > deadline:
+                raise RuntimeError(f"worker(s) {sorted(waiting)} did not "
+                                   f"start within {timeout_s:.0f}s")
+            msg = self._next_event(timeout=0.2)
+            if msg is None:
+                continue
+            self._handle(msg)
+            if isinstance(msg, Hello):
+                waiting.discard(msg.src)
+
+    def __enter__(self) -> "TwoProcessRuntime":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- serving ------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        req.arrival_time = req.arrival_time or time.monotonic()
+        self._requests[req.req_id] = req
+        self._pending.append(req)
+        self.stats.submitted += 1
+
+    def serve(self, requests: List[Request],
+              max_wall_s: float = 900.0) -> Dict[str, List[int]]:
+        """Drive every request to a terminal state; returns req_id → tokens."""
+        for r in requests:
+            self.submit(r)
+        deadline = time.monotonic() + max_wall_s
+        while self._unresolved():
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"two-process serve exceeded {max_wall_s:.0f}s with "
+                    f"{self._unresolved()} request(s) unresolved")
+            self._dispatch()
+            self._check_workers()
+            msg = self._next_event(timeout=0.05)
+            if msg is not None:
+                self._handle(msg)
+        return {r.req_id: list(r.output_tokens) for r in requests}
+
+    def _unresolved(self) -> int:
+        return sum(1 for r in self._requests.values()
+                   if r.state not in (State.FINISHED, State.FAILED))
+
+    def _dispatch(self) -> None:
+        """Admission control: D has ``max_batch`` slots; everything else
+        waits in the parent's queue."""
+        cap = self.d_spec.engine.max_batch
+        while self._pending and len(self._active) < cap:
+            req = self._pending.popleft()
+            if req.state == State.FAILED:
+                continue
+            patches = req.patches.shape[0] if req.patches is not None else 0
+            seq_len = req.prompt_len + patches
+            req.state = State.PREFILLING
+            rec = _FlightRecord(req=req, attempt=req.retries,
+                                p_gen=self._gen["P"])
+            self._active[req.req_id] = rec
+            # FIFO per queue: BeginStream always precedes its ChunkReady
+            self._cmd_qs["D"].put(BeginStream(req, req.retries, seq_len))
+            self._cmd_qs["P"].put(SubmitPrefill(req))
+
+    # -- event pump ---------------------------------------------------------- #
+    def _next_event(self, timeout: float):
+        try:
+            return self._evt_q.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def _handle(self, msg: Any) -> None:
+        if isinstance(msg, (Hello, Heartbeat)):
+            self._last_seen[msg.src] = time.monotonic()
+            if isinstance(msg, Hello):
+                self.worker_pids[msg.src] = msg.pid
+            elif msg.src == "P":
+                self._prune_released(msg.ack_seq)
+            return
+        if isinstance(msg, WorkerStats):
+            self.transfer_stats.merge(msg.transfer)
+            self.worker_stats[msg.src] = msg.engine
+            self._final_stats_expected -= 1
+            return
+        if isinstance(msg, (ChunkStaged, PrefillDone, PrefillFailed)):
+            self._last_seen["P"] = time.monotonic()
+            self._handle_p(msg)
+            return
+        self._last_seen["D"] = time.monotonic()
+        self._handle_d(msg)
+
+    def _rec_for(self, req_id: str, attempt: int) -> Optional[_FlightRecord]:
+        rec = self._active.get(req_id)
+        if rec is None or rec.attempt != attempt:
+            return None
+        return rec
+
+    def _prune_released(self, ack_seq: int) -> None:
+        """Drop the crash-cleanup record of releases P has confirmed."""
+        if ack_seq and self._released:
+            self._released = {s: seg for s, seg in self._released.items()
+                              if s > ack_seq}
+
+    def _release_on_p(self, key: str,
+                      segment: Optional[str] = None) -> None:
+        """Tell P it may free a staged key — or, if P is gone, unlink the
+        OS segment directly (when its name is known)."""
+        proc = self._procs.get("P")
+        if proc is not None and proc.is_alive():
+            self._release_seq += 1
+            if segment is not None:
+                self._released[self._release_seq] = segment
+            self._cmd_qs["P"].put(ReleaseStaged(key, self._release_seq))
+        elif segment is not None:
+            _unlink_segment(segment)
+
+    def _handle_p(self, msg: Any) -> None:
+        if isinstance(msg, (ChunkStaged, PrefillDone)):
+            self._prune_released(msg.ack_seq)
+        if isinstance(msg, ChunkStaged):
+            rec = self._rec_for(msg.req_id, msg.attempt)
+            if rec is None:                       # stale attempt: free it
+                self._release_on_p(msg.key, msg.segment)
+                return
+            rec.outstanding[msg.key] = msg.segment
+            rec.segments[msg.key] = msg.segment
+            rec.chunk_keys.append(msg.key)
+            rec.stage_spans.append(msg.t_stage)
+            rec.compute_spans.append(msg.t_compute)
+            rec.req.chunks_streamed += 1
+            self.stats.chunks_streamed += 1
+            self._cmd_qs["D"].put(ChunkReady(msg.req_id, msg.attempt,
+                                             msg.key, msg.segment,
+                                             msg.nbytes))
+            return
+        if isinstance(msg, PrefillDone):
+            rec = self._rec_for(msg.req_id, msg.attempt)
+            if rec is None:
+                if msg.tail is not None:
+                    self._release_on_p(msg.tail["key"], msg.tail["segment"])
+                return
+            rec.prefill_done = True
+            if msg.tail is not None:
+                rec.outstanding[msg.tail["key"]] = msg.tail["segment"]
+                rec.segments[msg.tail["key"]] = msg.tail["segment"]
+            self._cmd_qs["D"].put(FinalizeStream(msg.req_id, msg.attempt,
+                                                 msg.first_token,
+                                                 msg.seq_len, msg.tail))
+            return
+        if isinstance(msg, PrefillFailed):
+            rec = self._rec_for(msg.req_id, msg.attempt)
+            if rec is None:
+                return
+            self._abort_flight(rec, f"P-side dispatch failure: {msg.error}")
+
+    def _handle_d(self, msg: Any) -> None:
+        if isinstance(msg, ChunkRepaged):
+            rec = self._rec_for(msg.req_id, msg.attempt)
+            if rec is None:
+                self._release_on_p(msg.key)
+                return
+            rec.outstanding.pop(msg.key, None)
+            rec.repage_spans[msg.key] = msg.t_repage
+            if self._gen["P"] == rec.p_gen:       # creator still the live P
+                self._release_on_p(msg.key, rec.segments.get(msg.key))
+            else:           # creator died: a release would go to the wrong
+                segment = rec.segments.get(msg.key)   # process — unlink
+                if segment is not None:
+                    _unlink_segment(segment)
+            return
+        if isinstance(msg, TokenEmitted):
+            req = self._requests.get(msg.req_id)
+            rec = self._rec_for(msg.req_id, msg.attempt)
+            if req is None or rec is None:        # stale attempt's token
+                return
+            req.output_tokens.append(msg.token)
+            if msg.first:
+                rec.phase = "decode"
+                req.state = State.DECODING
+                if req.first_token_time is None:
+                    req.first_token_time = time.monotonic()
+                self.stats.p_dispatches[self.p_spec.engine.name] += 1
+                self.stats.d_dispatches[self.d_spec.engine.name] += 1
+                self._account_flight(rec)
+            return
+        if isinstance(msg, RequestDone):
+            req = self._requests.get(msg.req_id)
+            rec = self._rec_for(msg.req_id, msg.attempt)
+            if req is None or rec is None:        # stale attempt finishing
+                return
+            self._active.pop(msg.req_id, None)
+            req.state = State.FINISHED
+            req.finish_time = time.monotonic()
+            self.stats.finished += 1
+            return
+        if isinstance(msg, StreamFailed):
+            self.stream_failures.append((msg.req_id, msg.error))
+            rec = self._rec_for(msg.req_id, msg.attempt)
+            if rec is None:
+                return
+            self._abort_flight(rec, msg.error, abort_d=False)
+
+    # -- measured overlap ---------------------------------------------------- #
+    def _account_flight(self, rec: _FlightRecord) -> None:
+        """Wall-clock handoff accounting for one completed stream: the wire
+        interval of chunk *i* is [stage-end_i, repage-start_i]; whatever
+        part of it lies under this flight's prefill-compute spans was
+        *measured* overlap — true cross-process concurrency, not a model."""
+        repaged = [rec.repage_spans.get(k) for k in rec.chunk_keys]
+        pairs = [(st, rp) for st, rp in zip(rec.stage_spans, repaged)
+                 if rp is not None]
+        if not pairs:
+            return
+        t0 = min(st[0] for st, _ in pairs)
+        t1 = max(rp[1] for _, rp in pairs)
+        self.transfer_stats.wall_handoff_seconds += t1 - t0
+        # chunks can be concurrently in flight, so intersect the *unions*
+        # (wire-busy time ∩ compute-busy time) — bounded by the handoff span
+        wire = _union([(st[1], max(rp[0], st[1])) for st, rp in pairs])
+        compute = _union(rec.compute_spans)
+        self.transfer_stats.wall_overlap_seconds += \
+            sum(_interval_overlap(w, compute) for w in wire)
+
+    # -- failure handling ----------------------------------------------------- #
+    def _abort_flight(self, rec: _FlightRecord, reason: str,
+                      abort_d: bool = True) -> None:
+        self._active.pop(rec.req.req_id, None)
+        if abort_d:
+            dproc = self._procs.get("D")
+            if dproc is not None and dproc.is_alive():
+                self._cmd_qs["D"].put(
+                    AbortStream(rec.req.req_id, rec.attempt, reason))
+        pproc = self._procs.get("P")
+        if pproc is not None and pproc.is_alive() \
+                and self._gen["P"] == rec.p_gen:
+            for key, segment in rec.outstanding.items():
+                self._release_on_p(key, segment)
+        else:
+            # the staging process is gone (or already replaced): releases
+            # would go nowhere — unlink every segment this attempt ever
+            # staged (idempotent for the ones P freed before dying)
+            for segment in rec.segments.values():
+                _unlink_segment(segment)
+        rec.outstanding.clear()
+        self._requeue(rec.req)
+
+    def _requeue(self, req: Request) -> None:
+        if requeue_for_retry(req, self.stats, self.transfer_stats,
+                             self.max_retries):
+            self._pending.appendleft(req)
+
+    def _check_workers(self) -> None:
+        now = time.monotonic()
+        for side in ("P", "D"):
+            proc = self._procs.get(side)
+            if proc is None:
+                continue
+            if proc.is_alive():
+                if now - self._last_seen[side] > self.stall_timeout_s:
+                    proc.terminate()              # hung, not dead: make it dead
+                    proc.join(timeout=5.0)
+                    self._on_crash(side, "stalled past watchdog timeout")
+                continue
+            self._on_crash(side, f"exited with code {proc.exitcode}")
+
+    def _on_crash(self, side: str, why: str) -> None:
+        self.crashes[side] += 1
+        self._procs.pop(side, None)
+        if side == "P":
+            # prefill-phase flights whose stream never fully left P are
+            # void: abort the D reservation, unlink the dead attempt's
+            # stranded segments, requeue. Flights past PrefillDone are
+            # wholly on D's side — let them finish (a lost segment there
+            # surfaces as StreamFailed → requeue) rather than requeue a
+            # stream D may already be decoding, which would double-serve.
+            for rec in [r for r in self._active.values()
+                        if r.phase == "prefill" and not r.prefill_done]:
+                self._abort_flight(rec, f"P process died mid-stream ({why})")
+            # releases queued to the dead P were never processed: unlink
+            # those segments directly (no-op for any it freed in time)
+            for segment in self._released.values():
+                _unlink_segment(segment)
+            self._released.clear()
+        else:
+            # volatile KV died with the node: every non-terminal request
+            # restarts from prefill with its prefix appended
+            for rec in list(self._active.values()):
+                self._abort_flight(rec, f"D process died ({why})",
+                                   abort_d=False)
+        # a dying worker flushes its event queue before exiting — drain the
+        # flushed backlog *before* respawning, so ChunkStaged events from
+        # the dead attempt unlink their stranded segments (the stale path
+        # in _handle_p) instead of being mistaken for the successor's
+        while True:
+            msg = self._next_event(timeout=0.1)
+            if msg is None:
+                break
+            self._handle(msg)
+        if self._unresolved() == 0:
+            return
+        if self.crashes[side] > self.max_respawns:
+            for r in self._requests.values():
+                if r.state not in (State.FINISHED, State.FAILED):
+                    r.state = State.FAILED
+                    self.stats.failed += 1
+            return
+        self._spawn(side, fault=False)
+        self._await_hello({side}, timeout_s=120.0)
+
+    # -- shutdown -------------------------------------------------------------- #
+    def shutdown(self, timeout_s: float = 15.0) -> None:
+        self._final_stats_expected = 0
+        for side, proc in list(self._procs.items()):
+            if proc.is_alive():
+                self._cmd_qs[side].put(Shutdown())
+                self._final_stats_expected += 1
+        deadline = time.monotonic() + timeout_s
+        while self._final_stats_expected > 0 and time.monotonic() < deadline:
+            msg = self._next_event(timeout=0.2)
+            if msg is not None:
+                self._handle(msg)
+        for proc in self._procs.values():
+            proc.join(timeout=5.0)
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=5.0)
+        self._procs.clear()
+
+
+def serve_two_process(p_spec: EngineSpec, d_spec: EngineSpec,
+                      requests: List[Request], **kw
+                      ) -> Tuple[Dict[str, List[int]], TwoProcessRuntime]:
+    """One-shot convenience: start → serve → shutdown. Returns the token
+    streams and the (shut-down) runtime for stats inspection."""
+    max_wall_s = kw.pop("max_wall_s", 900.0)
+    rt = TwoProcessRuntime(p_spec, d_spec, **kw)
+    rt.start()
+    try:
+        tokens = rt.serve(requests, max_wall_s=max_wall_s)
+    finally:
+        rt.shutdown()
+    return tokens, rt

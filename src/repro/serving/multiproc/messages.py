@@ -1,0 +1,231 @@
+"""Control-plane protocol of the two-process P/D serving runtime.
+
+Everything here crosses an OS process boundary through
+``multiprocessing`` queues, so it is all plain picklable data:
+
+  * :class:`EngineSpec` — how a worker process rebuilds its model
+    instance (config + vendor profile + a parameter seed; parameters are
+    re-initialized deterministically in the worker instead of being
+    shipped over the wire).
+  * :class:`WorkerSpec` — one worker's full recipe: engine, wire format,
+    KV-connector kwargs, chunking, heartbeat cadence, fault injection.
+  * message dataclasses — the control plane proper. The *data* plane
+    (KV bytes) never rides these queues: chunks move through
+    ``SharedMemoryConnector`` segments, and the control plane only carries
+    the segment descriptors (:func:`SharedMemoryConnector.export_descriptor`).
+
+Wire protocol (parent = launcher, P = prefill worker, D = decode worker):
+
+  parent→P   SubmitPrefill · ReleaseStaged · Shutdown
+  P→parent   Hello · ChunkStaged · PrefillDone · PrefillFailed ·
+             Heartbeat · WorkerStats
+  parent→D   BeginStream · ChunkReady · FinalizeStream · AbortStream ·
+             Shutdown
+  D→parent   Hello · ChunkRepaged · TokenEmitted · RequestDone ·
+             StreamFailed · Heartbeat · WorkerStats
+
+Every per-request message carries ``attempt`` (the request's retry
+counter at dispatch) so a crashed attempt's stale messages can never be
+attributed to its requeued successor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.compat.precision import WireFormat
+from repro.serving.engine import VendorProfile
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Recipe for building one Engine inside a worker process."""
+    name: str
+    cfg: ModelConfig
+    vendor: VendorProfile
+    params_seed: int = 0
+    num_blocks: int = 256
+    max_batch: int = 8
+    max_seq_len: int = 512
+    role: str = "both"
+
+    def build(self):
+        """Materialize the engine (worker-side only: imports jax)."""
+        import jax
+
+        from repro.models import model as M
+        from repro.serving.engine import Engine
+        params = M.init_params(jax.random.key(self.params_seed), self.cfg)
+        return Engine(self.name, self.cfg, params, self.vendor,
+                      num_blocks=self.num_blocks, max_batch=self.max_batch,
+                      max_seq_len=self.max_seq_len, role=self.role)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerSpec:
+    """Everything one worker process needs, shipped through spawn()."""
+    engine: EngineSpec
+    wire: WireFormat
+    connector_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    prefill_chunk: Optional[int] = 16
+    heartbeat_s: float = 0.5
+    # fault injection (tests): P exits hard (os._exit) after staging this
+    # many chunks — the "process dies without drop()" conformance path
+    fault_exit_after_chunks: Optional[int] = None
+
+
+# --------------------------------------------------------------------- #
+# parent → P
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SubmitPrefill:
+    req: Request
+
+
+@dataclasses.dataclass(frozen=True)
+class ReleaseStaged:
+    """D consumed a chunk: the staging segment's creator may free it.
+    ``seq`` is the parent's monotone release counter; P piggybacks the
+    highest seq it has *processed* on its next message home (``ack_seq``),
+    letting the parent prune its crash-cleanup record of unconfirmed
+    releases without any clear-on-heartbeat race."""
+    key: str
+    seq: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Shutdown:
+    pass
+
+
+# --------------------------------------------------------------------- #
+# parent → D
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class BeginStream:
+    """Reserve a decode slot + paged blocks for an incoming handoff."""
+    req: Request
+    attempt: int
+    seq_len: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkReady:
+    """A staged chunk's shared-memory descriptor: adopt + issue_read."""
+    req_id: str
+    attempt: int
+    key: str
+    segment: str
+    nbytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FinalizeStream:
+    """All chunks staged: once every pending read re-paged, ship the tail
+    (states/cross, if any), activate the slot, emit the first token."""
+    req_id: str
+    attempt: int
+    first_token: int
+    seq_len: int
+    tail: Optional[Dict[str, Any]]       # export_descriptor of the tail key
+
+
+@dataclasses.dataclass(frozen=True)
+class AbortStream:
+    """P-side failure: drop pending reads and free the reservation."""
+    req_id: str
+    attempt: int
+    reason: str = ""
+
+
+# --------------------------------------------------------------------- #
+# workers → parent
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Hello:
+    src: str                              # "P" | "D"
+    pid: int
+    engine_name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Heartbeat:
+    src: str
+    ack_seq: int = 0                      # P only: highest release processed
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkStaged:
+    """P staged one chunk. Carries the shared-memory descriptor (for the
+    parent to forward to D) plus wall-clock stage/compute intervals
+    (time.monotonic — comparable across processes on one host) for the
+    launcher's measured-overlap accounting."""
+    req_id: str
+    attempt: int
+    index: int
+    key: str
+    segment: str
+    nbytes: int
+    t_stage: Tuple[float, float]
+    t_compute: Tuple[float, float]
+    ack_seq: int = 0                      # highest ReleaseStaged processed
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillDone:
+    req_id: str
+    attempt: int
+    first_token: int
+    seq_len: int
+    chunks: int
+    tail: Optional[Dict[str, Any]]
+    ack_seq: int = 0                      # highest ReleaseStaged processed
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillFailed:
+    req_id: str
+    attempt: int
+    error: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkRepaged:
+    """D re-paged one chunk (or the tail) into its pools."""
+    req_id: str
+    attempt: int
+    key: str
+    t_repage: Tuple[float, float]
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEmitted:
+    req_id: str
+    token: int
+    attempt: int
+    first: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestDone:
+    req_id: str
+    attempt: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamFailed:
+    """D surfaced a transfer failure (lost segment, adopt failure, abort
+    of an in-flight stream) — the scheduler side must requeue."""
+    req_id: str
+    attempt: int
+    error: str
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerStats:
+    """Final accounting a worker ships home at shutdown."""
+    src: str
+    transfer: Any                         # core.transport.TransferStats
+    engine: Dict[str, float]              # EngineStats.as_dict()

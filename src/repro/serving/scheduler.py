@@ -9,6 +9,14 @@ Responsibilities beyond the paper's workflow (required for 1000-node scale):
     penalty; stuck requests are re-dispatched after ``straggler_factor``×
     the pool-median step time
   * elastic scaling: instances join/leave at runtime (leave = drain first)
+
+Structure: the work is split into two *event loops* — the P-side
+:class:`PrefillFlightLoop` (dispatch requests, pump each flight's chunk
+stream) and the D-side :class:`DecodeLoop` (re-page landed chunks is part
+of flight pumping; decode-step every D engine). In single-process serving
+``GlobalScheduler.step()`` pumps both loops in turn; the two-process
+runtime (``repro.serving.multiproc``) runs the same two loops as real OS
+processes, with the control plane over queues instead of direct calls.
 """
 from __future__ import annotations
 
@@ -46,6 +54,31 @@ class SchedulerStats:
 _DISPATCH_ERRORS = (RuntimeError, MemoryError)
 
 
+def requeue_for_retry(req: Request, stats: SchedulerStats,
+                      transfer_stats, max_retries: int) -> bool:
+    """Shared failure/straggler recovery semantics (single-process
+    GlobalScheduler AND the two-process launcher — both runtimes must
+    requeue identically or the parity gate breaks): re-prefill with the
+    generated prefix appended to the prompt. ``output_tokens`` keeps the
+    already-streamed tokens (and ``max_new_tokens`` stays put, so ``done``
+    still fires at the original budget); the re-prefill's first token is
+    the continuation after the prefix. Returns True if the request should
+    rejoin the queue, False once it is FAILED past ``max_retries``."""
+    if req.retries >= max_retries:
+        req.state = State.FAILED
+        stats.failed += 1
+        return False
+    if req.output_tokens:
+        req.prompt = np.concatenate(
+            [req.prompt, np.asarray(req.output_tokens, req.prompt.dtype)])
+    req.retries += 1
+    req.state = State.QUEUED
+    stats.requeues += 1
+    # failure accounting is wire-visible: a requeue retries the transfer
+    transfer_stats.retries += 1
+    return True
+
+
 @dataclasses.dataclass
 class _Flight:
     """One in-flight chunked prefill+handoff: occupies a P instance and a
@@ -55,6 +88,149 @@ class _Flight:
     d: Engine
     stream: Any                     # serving.engine.PrefillStream
     handoff: Any                    # core.disagg.StreamedHandoff
+
+
+class PrefillFlightLoop:
+    """P-side event loop: dispatch pending requests into prefill flights,
+    then pump every flight — re-page chunks whose wire reads completed,
+    stream new chunks onto the wire, finalize exhausted streams.
+
+    One ``pump()`` call is one tick of P-side progress. The two-process
+    runtime's P worker runs the same dispatch→chunk→stage protocol as its
+    process main loop (``repro.serving.multiproc.p_worker``)."""
+
+    def __init__(self, sched: "GlobalScheduler"):
+        self.sched = sched
+        self.inflight: List[_Flight] = []
+
+    def pump(self, emitted: List[Tuple[Request, int]]) -> None:
+        self._dispatch(emitted)
+        self._advance_all(emitted)
+
+    # -- dispatch --------------------------------------------------------- #
+    def _dispatch(self, emitted: List[Tuple[Request, int]]) -> None:
+        """Start a prefill flight on a free P with a reserved slot on a D.
+        Monolithic mode (prefill_chunk None) drives the flight to completion
+        inside this tick; chunked mode leaves it in flight so the tick stays
+        short."""
+        s = self.sched
+        busy_p = {fl.p.name for fl in self.inflight}
+        still_pending: collections.deque = collections.deque()
+        while s.pending:
+            req = s.pending.popleft()
+            p_eng = s._pick_p(busy_p)
+            patches = req.patches.shape[0] if req.patches is not None else 0
+            d_eng = s._pick_d(req, req.prompt_len + patches)
+            if p_eng is None or d_eng is None:
+                still_pending.append(req)
+                continue
+            req.state = State.PREFILLING
+            req.prefill_instance = p_eng.name
+            req.decode_instance = d_eng.name
+            if s.prefill_chunk is None:
+                # monolithic: whole prefill + single-payload handoff in-tick
+                try:
+                    meta = s.pipeline.handoff(req, p_eng, d_eng)
+                except _DISPATCH_ERRORS:
+                    s._requeue(req, p_eng)
+                    continue
+                s._emit_first_token(req, p_eng, d_eng,
+                                    meta["first_token"], emitted)
+                continue
+            try:
+                stream = p_eng.prefill_stream(req, s.prefill_chunk)
+                handoff = s.pipeline.begin_handoff(
+                    req, p_eng, d_eng, stream.seq_len,
+                    compute_overlapped=stream.chunked_compute)
+            except _DISPATCH_ERRORS:
+                s._requeue(req, p_eng)
+                continue
+            self.inflight.append(_Flight(req, p_eng, d_eng, stream, handoff))
+            busy_p.add(p_eng.name)
+        s.pending = still_pending
+
+    # -- flight pumping --------------------------------------------------- #
+    def _advance_all(self, emitted: List[Tuple[Request, int]]) -> None:
+        """Advance in-flight chunked prefills by the per-tick budget; each
+        chunk's wire transfer overlaps the next chunk's compute."""
+        s = self.sched
+        for fl in list(self.inflight):
+            try:
+                tok = self._advance(fl, s.chunk_budget)
+            except _DISPATCH_ERRORS:
+                s._abort_flight(fl)
+                continue
+            if tok is not None:
+                self.inflight.remove(fl)
+                s._emit_first_token(fl.req, fl.p, fl.d, tok, emitted)
+
+    def _advance(self, fl: _Flight, budget: Optional[int]) -> Optional[int]:
+        """One tick of flight progress: re-page chunks whose wire reads
+        completed (``repage_budget``), then stream up to ``budget`` new
+        chunks (None = to completion) while the connector channel has room.
+        The flight finalizes only when the prefill stream is exhausted AND
+        every issued read has been re-paged — with a modeled-latency
+        connector the tail chunks complete in later ticks, and decode steps
+        run in between. Returns the first token on finalize, else None."""
+        s = self.sched
+        repaged = fl.handoff.poll_reads(s.repage_budget)
+        sent = 0
+        while (budget is None or sent < budget) and fl.handoff.can_send():
+            chunk = fl.stream.next_chunk()
+            if chunk is None:
+                break
+            fl.handoff.send_chunk(chunk)
+            fl.req.chunks_streamed += 1
+            s.stats.chunks_streamed += 1
+            sent += 1
+        # instant backends complete at issue time — spend what is left of
+        # the re-page budget on the chunks just sent
+        if s.repage_budget is None:
+            fl.handoff.poll_reads(None)
+        elif repaged < s.repage_budget:
+            fl.handoff.poll_reads(s.repage_budget - repaged)
+        if not fl.stream.done or fl.handoff.pending_reads():
+            return None
+        meta = fl.handoff.finalize(fl.stream.first_token,
+                                   fl.stream.tail_package())
+        return meta["first_token"]
+
+
+class DecodeLoop:
+    """D-side event loop: one continuous-batching decode step on every
+    routable D engine per ``pump()``, with the per-instance latency EMA
+    that feeds straggler-penalized routing. The two-process runtime's D
+    worker runs the same re-page→decode protocol as its process main loop
+    (``repro.serving.multiproc.d_worker``)."""
+
+    def __init__(self, sched: "GlobalScheduler"):
+        self.sched = sched
+        self.ema: Dict[str, float] = {}        # decode step latency EMA
+
+    def pump(self, emitted: List[Tuple[Request, int]]) -> None:
+        s = self.sched
+        for e in s._routable(s.d_pool) + \
+                [s.d_pool[n] for n in list(s._draining)
+                 if n in s.d_pool and not s.d_pool[n].failed]:
+            # reserved-but-not-ready flight slots don't decode — timing a
+            # no-op step would pollute the straggler-latency EMA
+            active = any(r is not None and e.slot_ready[i]
+                         for i, r in enumerate(e.slot_req))
+            if not active:
+                continue
+            t0 = time.perf_counter()
+            try:
+                results = e.decode_step()
+            except RuntimeError:
+                continue            # picked up by _handle_failures next tick
+            dt = time.perf_counter() - t0
+            prev = self.ema.get(e.name, dt)
+            self.ema[e.name] = 0.8 * prev + 0.2 * dt
+            for slot, req, tok in results:
+                req.output_tokens.append(tok)
+                emitted.append((req, tok))
+                if req.done:
+                    s._finish(req, e, slot)
 
 
 class GlobalScheduler:
@@ -91,11 +267,20 @@ class GlobalScheduler:
         self.p_pool: Dict[str, Engine] = {}
         self.d_pool: Dict[str, Engine] = {}
         self.pending: collections.deque[Request] = collections.deque()
-        self.inflight: List[_Flight] = []
         self.finished: List[Request] = []
         self.stats = SchedulerStats()
-        self._ema: Dict[str, float] = {}          # decode step latency EMA
+        self.prefill_loop = PrefillFlightLoop(self)
+        self.decode_loop = DecodeLoop(self)
         self._draining: set = set()
+
+    # back-compat views onto the event loops' state
+    @property
+    def inflight(self) -> List[_Flight]:
+        return self.prefill_loop.inflight
+
+    @property
+    def _ema(self) -> Dict[str, float]:
+        return self.decode_loop.ema
 
     # -- elastic pool management ----------------------------------------- #
     def add_instance(self, engine: Engine, role: Optional[str] = None) -> None:
@@ -138,24 +323,9 @@ class GlobalScheduler:
         self.stats.submitted += 1
 
     def _requeue(self, req: Request, engine: Engine) -> None:
-        """Failure/straggler path: re-prefill with the generated prefix
-        appended to the prompt. ``output_tokens`` keeps the already-streamed
-        tokens (and ``max_new_tokens`` stays put, so ``done`` still fires at
-        the original budget); the re-prefill's first token is the
-        continuation after the prefix."""
-        if req.retries >= self.max_retries:
-            req.state = State.FAILED
-            self.stats.failed += 1
-            return
-        if req.output_tokens:
-            req.prompt = np.concatenate(
-                [req.prompt, np.asarray(req.output_tokens, req.prompt.dtype)])
-        req.retries += 1
-        req.state = State.QUEUED
-        self.stats.requeues += 1
-        # failure accounting is wire-visible: a requeue retries the transfer
-        self.pipeline.transfer.stats.retries += 1
-        self.pending.appendleft(req)
+        if requeue_for_retry(req, self.stats, self.pipeline.transfer.stats,
+                             self.max_retries):
+            self.pending.appendleft(req)
 
     def _handle_failures(self) -> None:
         # flights first: a failed P or D voids the stream — drop the D
@@ -174,44 +344,8 @@ class GlobalScheduler:
 
     def _abort_flight(self, fl: _Flight) -> None:
         fl.handoff.abort()
-        self.inflight.remove(fl)
+        self.prefill_loop.inflight.remove(fl)
         self._requeue(fl.req, fl.p)
-
-    def _advance_flight(self, fl: _Flight, budget: Optional[int]
-                        ) -> Optional[int]:
-        """One tick of flight progress: re-page chunks whose wire reads
-        completed (``repage_budget``), then stream up to ``budget`` new
-        chunks (None = to completion) while the connector channel has room.
-        The flight finalizes only when the prefill stream is exhausted AND
-        every issued read has been re-paged — with a modeled-latency
-        connector the tail chunks complete in later ticks, and decode steps
-        run in between. Returns the first token on finalize, else None."""
-        repaged = fl.handoff.poll_reads(self.repage_budget)
-        sent = 0
-        while (budget is None or sent < budget) and fl.handoff.can_send():
-            chunk = fl.stream.next_chunk()
-            if chunk is None:
-                break
-            fl.handoff.send_chunk(chunk)
-            fl.req.chunks_streamed += 1
-            self.stats.chunks_streamed += 1
-            sent += 1
-        # instant backends complete at issue time — spend what is left of
-        # the re-page budget on the chunks just sent
-        if self.repage_budget is None:
-            fl.handoff.poll_reads(None)
-        elif repaged < self.repage_budget:
-            fl.handoff.poll_reads(self.repage_budget - repaged)
-        if not fl.stream.done or fl.handoff.pending_reads():
-            return None
-        meta = fl.handoff.finalize(fl.stream.first_token,
-                                   fl.stream.tail_package())
-        return meta["first_token"]
-
-    def _complete_flight(self, fl: _Flight, first_token: int,
-                         emitted: List[Tuple[Request, int]]) -> None:
-        self.inflight.remove(fl)
-        self._emit_first_token(fl.req, fl.p, fl.d, first_token, emitted)
 
     def _emit_first_token(self, req: Request, p_eng: Engine, d_eng: Engine,
                           first_token: int,
@@ -229,85 +363,14 @@ class GlobalScheduler:
             self._finish(req, d_eng)
 
     def step(self) -> List[Tuple[Request, int]]:
-        """One scheduler tick. Returns emitted (request, token) pairs."""
+        """One scheduler tick: pump the P-side flight loop, then the D-side
+        decode loop. Returns emitted (request, token) pairs."""
         self._handle_failures()
         # advance the wire: async connectors progress in-flight reads here
         self.pipeline.transfer.tick()
         emitted: List[Tuple[Request, int]] = []
-
-        # 1. dispatch pending requests: start a prefill flight on a free P
-        #    with a reserved slot on a D. Monolithic mode (prefill_chunk
-        #    None) drives the flight to completion inside this tick; chunked
-        #    mode leaves it in flight so the tick stays short.
-        busy_p = {fl.p.name for fl in self.inflight}
-        still_pending: collections.deque = collections.deque()
-        while self.pending:
-            req = self.pending.popleft()
-            p_eng = self._pick_p(busy_p)
-            patches = req.patches.shape[0] if req.patches is not None else 0
-            d_eng = self._pick_d(req, req.prompt_len + patches)
-            if p_eng is None or d_eng is None:
-                still_pending.append(req)
-                continue
-            req.state = State.PREFILLING
-            req.prefill_instance = p_eng.name
-            req.decode_instance = d_eng.name
-            if self.prefill_chunk is None:
-                # monolithic: whole prefill + single-payload handoff in-tick
-                try:
-                    meta = self.pipeline.handoff(req, p_eng, d_eng)
-                except _DISPATCH_ERRORS:
-                    self._requeue(req, p_eng)
-                    continue
-                self._emit_first_token(req, p_eng, d_eng,
-                                       meta["first_token"], emitted)
-                continue
-            try:
-                stream = p_eng.prefill_stream(req, self.prefill_chunk)
-                handoff = self.pipeline.begin_handoff(
-                    req, p_eng, d_eng, stream.seq_len,
-                    compute_overlapped=stream.chunked_compute)
-            except _DISPATCH_ERRORS:
-                self._requeue(req, p_eng)
-                continue
-            self.inflight.append(_Flight(req, p_eng, d_eng, stream, handoff))
-            busy_p.add(p_eng.name)
-        self.pending = still_pending
-
-        # 1b. advance in-flight chunked prefills by the per-tick budget;
-        #     each chunk's wire transfer overlaps the next chunk's compute
-        for fl in list(self.inflight):
-            try:
-                tok = self._advance_flight(fl, self.chunk_budget)
-            except _DISPATCH_ERRORS:
-                self._abort_flight(fl)
-                continue
-            if tok is not None:
-                self._complete_flight(fl, tok, emitted)
-
-        # 2. one decode step on every D engine
-        for e in self._routable(self.d_pool) + \
-                [self.d_pool[n] for n in list(self._draining)
-                 if n in self.d_pool and not self.d_pool[n].failed]:
-            # reserved-but-not-ready flight slots don't decode — timing a
-            # no-op step would pollute the straggler-latency EMA
-            active = any(r is not None and e.slot_ready[i]
-                         for i, r in enumerate(e.slot_req))
-            if not active:
-                continue
-            t0 = time.perf_counter()
-            try:
-                results = e.decode_step()
-            except RuntimeError:
-                continue            # picked up by _handle_failures next tick
-            dt = time.perf_counter() - t0
-            prev = self._ema.get(e.name, dt)
-            self._ema[e.name] = 0.8 * prev + 0.2 * dt
-            for slot, req, tok in results:
-                req.output_tokens.append(tok)
-                emitted.append((req, tok))
-                if req.done:
-                    self._finish(req, e, slot)
+        self.prefill_loop.pump(emitted)
+        self.decode_loop.pump(emitted)
         return emitted
 
     def _finish(self, req: Request, engine: Engine,

@@ -1,0 +1,261 @@
+"""Two-process P/D serving runtime (repro.serving.multiproc).
+
+The acceptance bar for genuine disaggregation:
+
+  1. *parity*: the two-process runtime (P and D engines in separate OS
+     processes, control plane over queues, KV data plane over shared
+     memory) produces token-exact output vs the single-process
+     ``GlobalScheduler`` serving loop.
+  2. *failure surfacing*: the P process dying hard (``os._exit``)
+     mid-stream must strand no shared-memory segments, the D process must
+     surface a transfer failure, and the launcher must requeue — with the
+     retry visible in ``TransferStats.retries`` across the process
+     boundary — and still finish every request after the respawn.
+  3. *no leaks*: no named shared-memory segments survive a connector
+     ``close()``, nor a connector that is dropped without ``close()``
+     (the ``weakref.finalize`` guard).
+"""
+import gc
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.compat.precision import WireFormat
+from repro.core.disagg import DisaggPipeline
+from repro.core.transport import SharedMemoryConnector
+from repro.core.transport.base import TransferStats
+from repro.models import model as M
+from repro.serving.engine import Engine, VendorProfile
+from repro.serving.multiproc import (EngineSpec, TwoProcessRuntime,
+                                     serve_two_process)
+from repro.serving.multiproc.launcher import _interval_overlap, _union
+from repro.serving.request import Request
+from repro.serving.scheduler import GlobalScheduler
+from repro.serving.server import Server
+from tests.conftest import TINY_FAMILIES
+
+CFG = TINY_FAMILIES["dense"]
+# heterogeneous pair: different block size, layout, and TP degree per side
+VENDOR_P = VendorProfile("B", block_size=8, layout="nhbd",
+                         kv_dtype="float32", tp=2)
+VENDOR_D = VendorProfile("A", block_size=4, layout="nbhd",
+                         kv_dtype="float32", tp=1)
+SEED = 0
+CHUNK = 8
+
+
+def _requests(n=3, max_new=4):
+    rng = np.random.default_rng(7)
+    return [Request(req_id=f"req-{i}",
+                    prompt=rng.integers(0, CFG.vocab_size,
+                                        int(rng.integers(14, 30))
+                                        ).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _spec(name, vendor, role):
+    return EngineSpec(name, CFG, vendor, params_seed=SEED, num_blocks=64,
+                      max_batch=4, max_seq_len=64, role=role)
+
+
+def _serve_single(reqs):
+    """Single-process reference: same engines, same connector kind."""
+    params = M.init_params(jax.random.key(SEED), CFG)
+    mk = lambda name, vendor, role: Engine(
+        name, CFG, params, vendor, num_blocks=64, max_batch=4,
+        max_seq_len=64, role=role)
+    connector = SharedMemoryConnector()
+    sched = GlobalScheduler(DisaggPipeline(connector,
+                                           WireFormat("raw", "float32")),
+                            prefill_chunk=CHUNK)
+    sched.add_instance(mk("P0", VENDOR_P, "prefill"))
+    sched.add_instance(mk("D0", VENDOR_D, "decode"))
+    server = Server(sched)
+    for r in reqs:
+        server.submit(r)
+    ticks = 0
+    while sched.stats.finished < len(reqs) and ticks < 2000:
+        sched.step()
+        ticks += 1
+    assert sched.stats.finished == len(reqs)
+    connector.close()
+    return {r.req_id: list(r.output_tokens) for r in reqs}
+
+
+def _shm_files():
+    """Named shared-memory data segments (``psm_*`` is CPython's
+    ``SharedMemory`` name prefix — queue semaphores etc. don't count)."""
+    if not os.path.isdir("/dev/shm"):
+        return None
+    return {f for f in os.listdir("/dev/shm") if f.startswith("psm_")}
+
+
+# --------------------------------------------------------------------- #
+# 1. parity: two OS processes, token-exact vs single-process
+# --------------------------------------------------------------------- #
+def test_two_process_token_exact_vs_single_process():
+    before = _shm_files()
+    ref = _serve_single(_requests())
+
+    reqs = _requests()
+    tokens, rt = serve_two_process(_spec("P0", VENDOR_P, "prefill"),
+                                   _spec("D0", VENDOR_D, "decode"),
+                                   reqs, prefill_chunk=CHUNK,
+                                   max_wall_s=300.0)
+    # really two other OS processes
+    assert set(rt.worker_pids) == {"P", "D"}
+    assert len({os.getpid(), *rt.worker_pids.values()}) == 3
+    assert rt.stats.finished == len(reqs)
+    assert tokens == ref
+
+    # KV moved through shared memory (both sides' stats merged home) and
+    # the launcher measured real wall-clock handoff intervals
+    assert rt.transfer_stats.transfers > 0
+    assert rt.transfer_stats.bytes_moved > 0
+    assert rt.transfer_stats.wall_handoff_seconds > 0
+    assert 0 <= rt.transfer_stats.wall_overlap_seconds \
+        <= rt.transfer_stats.wall_handoff_seconds
+    # no stranded segments after shutdown
+    after = _shm_files()
+    if before is not None:
+        assert after - before == set()
+
+
+def test_two_process_backpressure_on_one_slot_channel():
+    """A burst of ChunkReady messages must back-pressure on the
+    connector's ``max_inflight``, not overrun the channel and fail
+    streams: with a 1-read channel every request still completes."""
+    reqs = _requests(n=3)
+    tokens, rt = serve_two_process(_spec("P0", VENDOR_P, "prefill"),
+                                   _spec("D0", VENDOR_D, "decode"),
+                                   reqs, prefill_chunk=CHUNK,
+                                   connector_kwargs={"max_inflight": 1},
+                                   max_wall_s=300.0)
+    assert rt.stats.finished == len(reqs)
+    assert rt.stats.failed == 0
+    assert not rt.stream_failures
+    for r in reqs:
+        assert len(tokens[r.req_id]) == r.max_new_tokens
+
+
+# --------------------------------------------------------------------- #
+# 2. P dies hard mid-stream → D surfaces it, launcher requeues, recovers
+# --------------------------------------------------------------------- #
+def test_p_crash_mid_stream_surfaces_failure_and_requeues():
+    before = _shm_files()
+    reqs = _requests(n=2)
+    rt = TwoProcessRuntime(_spec("P0", VENDOR_P, "prefill"),
+                           _spec("D0", VENDOR_D, "decode"),
+                           prefill_chunk=CHUNK,
+                           fault_exit_after_chunks=2)
+    rt.start()
+    try:
+        tokens = rt.serve(reqs, max_wall_s=300.0)
+    finally:
+        rt.shutdown()
+
+    assert rt.crashes["P"] == 1                # died once, was respawned
+    # the D side surfaced the broken stream (abort / lost segment), and the
+    # retry crossed the process boundary into the wire's accounting
+    assert rt.stream_failures
+    assert rt.stats.requeues >= 1
+    assert rt.transfer_stats.retries >= 1
+    # serving still completed, and the re-prefill was from scratch (the
+    # crash hit during prefill, before any generated prefix existed)
+    assert rt.stats.finished == len(reqs)
+    assert rt.stats.failed == 0
+    for r in reqs:
+        assert len(tokens[r.req_id]) == r.max_new_tokens
+    # the dead attempt's segments were unlinked, not stranded
+    after = _shm_files()
+    if before is not None:
+        assert after - before == set()
+
+
+# --------------------------------------------------------------------- #
+# 3. segment-leak guard on the connector itself
+# --------------------------------------------------------------------- #
+def _stage_some(conn, n=3):
+    names = []
+    for i in range(n):
+        key = f"leak-{i}"
+        conn.stage(key, {"k": np.arange(64, dtype=np.float32)}, {"i": i})
+        names.append(conn.segment_name(key))
+    return names
+
+
+def _assert_unlinked(names):
+    from multiprocessing import shared_memory
+    for name in names:
+        with pytest.raises(FileNotFoundError):
+            shared_memory.SharedMemory(name=name)
+
+
+def test_shm_close_unlinks_every_segment():
+    conn = SharedMemoryConnector()
+    names = _stage_some(conn)
+    conn.close()
+    _assert_unlinked(names)
+
+
+def test_shm_finalizer_unlinks_on_drop_without_close():
+    conn = SharedMemoryConnector()
+    names = _stage_some(conn)
+    del conn                               # no drop(), no close()
+    gc.collect()
+    _assert_unlinked(names)
+
+
+def test_shm_adopted_segment_not_unlinked_by_reader():
+    """The reader detaches on complete(); only the creator unlinks."""
+    creator = SharedMemoryConnector()
+    reader = SharedMemoryConnector()
+    creator.stage("x", {"k": np.ones(8, np.float32)}, {})
+    desc = creator.export_descriptor("x")
+    reader.adopt_segment(desc["key"], desc["segment"], desc["nbytes"])
+    payload, _meta = reader.issue_read("x").wait()
+    np.testing.assert_array_equal(payload["k"], np.ones(8, np.float32))
+    reader.complete("x")                   # detach only
+    from multiprocessing import shared_memory
+    seg = shared_memory.SharedMemory(name=desc["segment"])   # still alive
+    seg.close()
+    creator.complete("x")                  # creator unlinks
+    _assert_unlinked([desc["segment"]])
+    reader.close()
+    creator.close()
+
+
+# --------------------------------------------------------------------- #
+# 4. launcher accounting helpers
+# --------------------------------------------------------------------- #
+def test_transfer_stats_merge_sums_counters_and_maxes_peak():
+    a = TransferStats(transfers=2, bytes_moved=100, retries=1,
+                      peak_buffer_bytes=50, wall_handoff_seconds=1.0)
+    b = TransferStats(transfers=3, bytes_moved=10, retries=0,
+                      peak_buffer_bytes=80, wall_overlap_seconds=0.5)
+    a.merge(b)
+    assert (a.transfers, a.bytes_moved, a.retries) == (5, 110, 1)
+    assert a.peak_buffer_bytes == 80       # high-water, not a sum
+    assert a.wall_handoff_seconds == 1.0
+    assert a.wall_overlap_seconds == 0.5
+
+
+def test_interval_overlap():
+    spans = [(0.0, 1.0), (2.0, 3.0)]
+    assert _interval_overlap((0.5, 2.5), spans) == pytest.approx(1.0)
+    assert _interval_overlap((1.0, 2.0), spans) == 0.0
+    assert _interval_overlap((-1.0, 4.0), spans) == pytest.approx(2.0)
+
+
+def test_union_merges_overlapping_and_drops_empty():
+    assert _union([(2.0, 3.0), (0.0, 1.5), (1.0, 2.5), (5.0, 5.0)]) \
+        == [(0.0, 3.0)]
+    # concurrent in-flight chunks must not double-count overlap: the
+    # union of their wire intervals is what gets intersected with compute
+    wire = _union([(0.0, 2.0), (1.0, 3.0)])
+    assert sum(_interval_overlap(w, [(0.0, 10.0)]) for w in wire) \
+        == pytest.approx(3.0)
