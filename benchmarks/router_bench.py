@@ -1,0 +1,146 @@
+"""Router benchmark: the real multi-process cluster runtime, 1P+1D vs
+2P×2D, on a tiny model — measures what the load-aware router actually
+buys (and costs) with live OS processes and shared-memory KV handoff:
+
+  * requests/s (wall-clock, parent-measured)
+  * TTFT p50/p95 (request arrival → first decoded token)
+  * per-instance utilization imbalance ((max−min)/mean dispatch counts —
+    0.0 means the router spread work perfectly)
+
+Writes ``BENCH_router.json`` at the repo root (CI uploads it as an
+artifact). The model is intentionally small: the point is the routing
+and process topology, not the FLOPs.
+
+  PYTHONPATH=src python -m benchmarks.router_bench [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.engine import VendorProfile
+from repro.serving.multiproc import ClusterRuntime, ClusterSpec, EngineSpec
+from repro.serving.multiproc.report import imbalance, percentile, ttfts_s
+from repro.serving.request import Request
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_router.json"
+
+# tiny on purpose: real processes + real shm handoff, minimal FLOPs
+CFG = ModelConfig(name="router-bench-tiny", family="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                  d_ff=128, vocab_size=512, param_dtype="float32",
+                  compute_dtype="float32")
+VENDOR_P = VendorProfile("benchB", block_size=8, layout="nhbd",
+                         kv_dtype="float32", tp=2, hardware="gpu-b")
+VENDOR_D = VendorProfile("benchA", block_size=4, layout="nbhd",
+                         kv_dtype="float32", tp=1, hardware="gpu-a")
+
+
+def build_requests(n: int, max_new: int):
+    rng = np.random.default_rng(7)
+    return [Request(req_id=f"bench-{i:03d}",
+                    prompt=rng.integers(0, CFG.vocab_size,
+                                        int(rng.integers(8, 24))
+                                        ).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _cluster(n_p: int, n_d: int) -> ClusterSpec:
+    mk = lambda name, vendor, role: EngineSpec(
+        name, CFG, vendor, params_seed=0, num_blocks=128, max_batch=4,
+        max_seq_len=64, role=role)
+    return ClusterSpec(
+        p=tuple(mk(f"P{i}", VENDOR_P, "prefill") for i in range(n_p)),
+        d=tuple(mk(f"D{i}", VENDOR_D, "decode") for i in range(n_d)))
+
+
+def run_topology(n_p: int, n_d: int, n_requests: int, max_new: int) -> dict:
+    reqs = build_requests(n_requests, max_new)
+    # spawn first so the measurement is serving, not worker startup
+    # (each spawned worker pays a full jax import on this container),
+    # and warm every instance through the router so first-use jit
+    # compilation doesn't land inside the timed window
+    rt = ClusterRuntime(_cluster(n_p, n_d), prefill_chunk=8)
+    try:
+        rt.start()
+        warmup = [Request(req_id=f"warm-{i}",
+                          prompt=np.arange(9, dtype=np.int32) + i,
+                          max_new_tokens=2)
+                  for i in range(2 * max(n_p, n_d))]
+        rt.serve(warmup, max_wall_s=600.0)
+        warm_finished = rt.stats.finished
+        warm_p = dict(rt.stats.p_dispatches)
+        warm_d = dict(rt.stats.d_dispatches)
+        t0 = time.perf_counter()
+        tokens = rt.serve(reqs, max_wall_s=600.0)
+        wall = time.perf_counter() - t0
+    finally:
+        rt.shutdown()
+    finished = rt.stats.finished - warm_finished
+    if finished != len(reqs):
+        raise RuntimeError(f"{n_p}P{n_d}D run lost requests: "
+                           f"{finished}/{len(reqs)} finished")
+    p_disp = {k: v - warm_p.get(k, 0)
+              for k, v in rt.stats.p_dispatches.items()}
+    d_disp = {k: v - warm_d.get(k, 0)
+              for k, v in rt.stats.d_dispatches.items()}
+    tt = ttfts_s(reqs)
+    return {
+        "topology": f"{n_p}P{n_d}D",
+        "requests": len(reqs),
+        "finished": finished,
+        "wall_s": round(wall, 3),
+        "requests_per_s": round(len(reqs) / wall, 3),
+        "tokens_per_s": round(sum(len(t) for t in tokens.values()) / wall, 1),
+        "ttft_p50_s": round(percentile(tt, 50), 4),
+        "ttft_p95_s": round(percentile(tt, 95), 4),
+        "p_dispatches": p_disp,
+        "d_dispatches": d_disp,
+        "p_imbalance": round(imbalance(p_disp), 3),
+        "d_imbalance": round(imbalance(d_disp), 3),
+        "requeues": rt.stats.requeues,
+        "streamed_chunks": rt.transfer_stats.chunks,
+    }
+
+
+def main(out: pathlib.Path = DEFAULT_OUT, n_requests: int = 16,
+         max_new: int = 8) -> dict:
+    results = {}
+    for n_p, n_d in ((1, 1), (2, 2)):
+        label = f"{n_p}P{n_d}D"
+        print(f"== {label}: {n_requests} requests × {max_new} new tokens ==")
+        r = run_topology(n_p, n_d, n_requests, max_new)
+        results[label] = r
+        print(f"  {r['requests_per_s']:.2f} req/s, "
+              f"ttft p50 {r['ttft_p50_s'] * 1e3:.0f} ms / "
+              f"p95 {r['ttft_p95_s'] * 1e3:.0f} ms, "
+              f"imbalance P {r['p_imbalance']:.2f} D {r['d_imbalance']:.2f}")
+    doc = {
+        "benchmark": "router",
+        "model": CFG.name,
+        "config": {"requests": n_requests, "max_new": max_new,
+                   "prefill_chunk": 8},
+        "topologies": results,
+    }
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {out}")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller request count (CI smoke)")
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+    n = 8 if args.fast else args.requests
+    main(out=args.out, n_requests=n, max_new=args.max_new)

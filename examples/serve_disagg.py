@@ -1,26 +1,35 @@
 """End-to-end driver: serve a ~100M-param model with batched requests
 through the full disaggregated stack — heterogeneous P/D vendor profiles,
-global scheduler with load-aware routing, a mid-run D-instance failure
-(recovered via re-prefill), and elastic scale-up.
+load-aware routing, a mid-run D-instance failure (recovered via
+re-prefill), and elastic scale-up.
 
 Two runtimes share the stack:
 
   * single-process (default): every engine lives in this process and the
     `GlobalScheduler` pumps the P-side flight loop and D-side decode loop
     in one tick loop.
-  * ``--two-process``: the P and D engines run in *separate OS processes*
-    (``repro.serving.multiproc``), control plane over multiprocessing
-    queues, KV data plane over SharedMemoryConnector segments. Requires
-    ``--connector shm``.
+  * multi-process (``--num-p/--num-d``, or ``--two-process`` for the
+    degenerate 1P+1D point): N prefill + M decode engines run in
+    *separate OS processes* (``repro.serving.multiproc``), the parent
+    routes each request by measured load, control plane over
+    multiprocessing queues, KV data plane over SharedMemoryConnector
+    segments. Requires ``--connector shm``. ``--plan`` sizes the topology
+    with the planner's joint optimization (``plan_deployment`` →
+    ``to_cluster_spec``) and prints a plan-vs-measured report;
+    ``--num-p/--num-d`` override the planned counts.
 
-``--parity`` runs both runtimes back to back and asserts token-exact
-output — the acceptance check the CI two-process-smoke job enforces.
+``--parity`` runs both runtimes back to back and exits nonzero with a
+per-request token diff unless the output is token-exact — the acceptance
+check the CI smoke jobs enforce.
 
   PYTHONPATH=src python examples/serve_disagg.py [--requests 24]
   PYTHONPATH=src python examples/serve_disagg.py --two-process --connector shm
-  PYTHONPATH=src python examples/serve_disagg.py --two-process --connector shm --parity
+  PYTHONPATH=src python examples/serve_disagg.py --num-p 2 --num-d 2 \\
+      --connector shm --parity
+  PYTHONPATH=src python examples/serve_disagg.py --plan --connector shm
 """
 import argparse
+import sys
 import time
 
 import numpy as np
@@ -128,28 +137,60 @@ def run_single(args, faults: bool):
     return {r.req_id: list(r.output_tokens) for r in reqs}
 
 
-def run_two_process(args):
-    """Two-process runtime: P and D engines in separate OS processes."""
+def _build_cluster(args):
+    """Resolve the multi-process topology: planner-fed (--plan) with
+    --num-p/--num-d overriding, or explicit counts (default 1P+1D)."""
+    from repro.serving.multiproc import ClusterSpec, EngineSpec
+
+    plan = None
+    if args.plan:
+        from repro.core.planner.hardware import GPU_A, GPU_B
+        from repro.core.planner.optimizer import plan_deployment
+        from repro.core.planner.workload import Workload
+        wl = Workload(qps=args.plan_qps, input_len=48,
+                      output_len=args.max_new,
+                      slo_ttft_s=10.0, slo_tpot_s=1.0)
+        plan = plan_deployment(CFG, wl, GPU_B, GPU_A)
+        print(f"planner chose {plan.ratio()} "
+              f"(capacity {plan.qps_capacity:.2f} req/s, "
+              f"${plan.cost_per_hour:.2f}/h)")
+        spec = plan.to_cluster_spec(CFG, p_vendor=VENDOR_P,
+                                    d_vendor=VENDOR_D,
+                                    params_seed=PARAMS_SEED,
+                                    num_blocks=512, max_batch=8,
+                                    max_seq_len=256,
+                                    num_p=args.num_p, num_d=args.num_d)
+        return spec, plan
+    n_p = args.num_p or 1
+    n_d = args.num_d or 1
+    spec = ClusterSpec(
+        p=tuple(EngineSpec(f"P{i}", CFG, VENDOR_P, params_seed=PARAMS_SEED,
+                           num_blocks=512, max_batch=8, max_seq_len=256,
+                           role="prefill") for i in range(n_p)),
+        d=tuple(EngineSpec(f"D{i}", CFG, VENDOR_D, params_seed=PARAMS_SEED,
+                           num_blocks=512, max_batch=8, max_seq_len=256,
+                           role="decode") for i in range(n_d)))
+    return spec, plan
+
+
+def run_cluster(args):
+    """Multi-process runtime: N P + M D engines in separate OS processes."""
     import os
 
-    from repro.serving.multiproc import EngineSpec, serve_two_process
+    from repro.serving.multiproc import serve_cluster
+    from repro.serving.multiproc.report import format_report, plan_vs_measured
 
     if args.connector != "shm":
-        raise SystemExit("--two-process needs the cross-process staging "
-                         "backend: pass --connector shm")
-    p_spec = EngineSpec("P0", CFG, VENDOR_P, params_seed=PARAMS_SEED,
-                        num_blocks=512, max_batch=8, max_seq_len=256,
-                        role="prefill")
-    d_spec = EngineSpec("D0", CFG, VENDOR_D, params_seed=PARAMS_SEED,
-                        num_blocks=512, max_batch=8, max_seq_len=256,
-                        role="decode")
+        raise SystemExit("the multi-process runtime needs the cross-process "
+                         "staging backend: pass --connector shm")
+    cluster, plan = _build_cluster(args)
     reqs = build_requests(args.requests, args.max_new)
-    print(f"serving {len(reqs)} requests on 1P + 1D "
+    print(f"serving {len(reqs)} requests on {cluster.ratio()} "
           f"(separate OS processes; parent pid {os.getpid()}) ...")
     t0 = time.perf_counter()
-    tokens, rt = serve_two_process(p_spec, d_spec, reqs,
-                                   prefill_chunk=args.prefill_chunk,
-                                   max_wall_s=600.0)
+    tokens, rt = serve_cluster(cluster, reqs,
+                               prefill_chunk=args.prefill_chunk,
+                               max_wall_s=600.0)
     wall = time.perf_counter() - t0
     total_tokens = sum(len(t) for t in tokens.values())
     print(f"\nfinished {rt.stats.finished}/{len(reqs)} requests, "
@@ -157,6 +198,8 @@ def run_two_process(args):
           f"({total_tokens / wall:.0f} tok/s on CPU)")
     print(f"worker pids: {rt.worker_pids} (parent {os.getpid()})")
     _print_wire(rt.transfer_stats)
+    print()
+    print(format_report(plan_vs_measured(rt, reqs, plan=plan, wall_s=wall)))
     assert rt.stats.finished == len(reqs), "lost requests!"
     return tokens
 
@@ -176,6 +219,29 @@ def _print_wire(ts) -> None:
               f"time")
 
 
+def _parity_diff(ref, got) -> int:
+    """Print a readable per-request token diff; returns mismatch count."""
+    bad = 0
+    for rid in sorted(set(ref) | set(got)):
+        a, b = ref.get(rid), got.get(rid)
+        if a == b:
+            continue
+        bad += 1
+        if a is None or b is None:
+            print(f"  {rid}: only in "
+                  f"{'single-process' if b is None else 'multi-process'} run",
+                  file=sys.stderr)
+            continue
+        div = next((i for i, (x, y) in enumerate(zip(a, b)) if x != y),
+                   min(len(a), len(b)))
+        print(f"  {rid}: diverges at token {div} "
+              f"(single has {len(a)}, multi has {len(b)})", file=sys.stderr)
+        lo, hi = max(0, div - 2), div + 4
+        print(f"    single[{lo}:{hi}] = {a[lo:hi]}", file=sys.stderr)
+        print(f"    multi [{lo}:{hi}] = {b[lo:hi]}", file=sys.stderr)
+    return bad
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
@@ -188,27 +254,45 @@ def main():
                     help="KV-transport backend: in-process (zero-copy), "
                          "shared-memory (real cross-process staging), or "
                          "modeled-RDMA (async multi-tick completion)")
+    ap.add_argument("--num-p", type=int, default=None,
+                    help="prefill worker processes (multi-process runtime; "
+                         "overrides --plan)")
+    ap.add_argument("--num-d", type=int, default=None,
+                    help="decode worker processes (multi-process runtime; "
+                         "overrides --plan)")
+    ap.add_argument("--plan", action="store_true",
+                    help="size the topology with the planner's joint "
+                         "optimization (plan_deployment → to_cluster_spec) "
+                         "and print a plan-vs-measured report")
+    ap.add_argument("--plan-qps", type=float, default=0.5,
+                    help="workload QPS fed to --plan")
     ap.add_argument("--two-process", action="store_true",
-                    help="run the P and D engines in separate OS processes "
-                         "(multiproc runtime; requires --connector shm)")
+                    help="run the degenerate 1P+1D multi-process runtime "
+                         "(alias for --num-p 1 --num-d 1; requires "
+                         "--connector shm)")
     ap.add_argument("--parity", action="store_true",
-                    help="run single-process then two-process and assert "
-                         "token-exact output (implies --two-process)")
+                    help="run single-process then multi-process and exit "
+                         "nonzero with a token diff unless output is "
+                         "token-exact")
     args = ap.parse_args()
+    multiproc = (args.two_process or args.plan
+                 or args.num_p is not None or args.num_d is not None)
 
     if args.parity:
         print("== parity: single-process reference ==")
         ref = run_single(args, faults=False)
-        print("\n== parity: two-process runtime ==")
-        two = run_two_process(args)
-        assert set(ref) == set(two), (sorted(ref), sorted(two))
-        for rid in sorted(ref):
-            assert ref[rid] == two[rid], \
-                f"{rid}: single={ref[rid]} two-process={two[rid]}"
+        print("\n== parity: multi-process runtime ==")
+        got = run_cluster(args)
+        bad = _parity_diff(ref, got)
+        if bad:
+            print(f"\nPARITY FAILED: {bad}/{len(set(ref) | set(got))} "
+                  "request(s) diverge between the single-process and "
+                  "multi-process runtimes", file=sys.stderr)
+            sys.exit(1)
         print(f"\nPARITY OK: {len(ref)} requests token-exact across "
-              "single-process and two-process runtimes")
-    elif args.two_process:
-        run_two_process(args)
+              "single-process and multi-process runtimes")
+    elif multiproc:
+        run_cluster(args)
     else:
         run_single(args, faults=True)
 

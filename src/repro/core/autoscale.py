@@ -12,16 +12,23 @@ Policy, evaluated per control tick against SLO headroom:
 
 The planner's DeploymentPlan provides the baseline (n_prefill, n_decode);
 the autoscaler never scales below it — the static optimum is the floor,
-the dynamics handle bursts. Instances are created through a user factory
-(on a real cluster: pod allocation + weight loading; here: Engine()).
+the dynamics handle bursts.
+
+The controller is decoupled from where the load numbers come from by a
+:class:`LoadSource`: :class:`SchedulerLoadSource` reads the in-process
+``GlobalScheduler`` (engines in this process, ``Engine.load()`` is
+callable), while :class:`ClusterLoadSource` reads the multi-process
+``ClusterRuntime`` — *measured* queue depth and slot occupancy from
+worker heartbeats plus the parent's own dispatch bookkeeping, with
+grow/drain mapped onto ``add_instance``/``remove_instance`` (spawning
+and draining real worker processes). Instances are created through a
+user factory (on a real cluster: pod allocation + weight loading; here:
+``Engine()`` / ``EngineSpec``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
-
-from repro.serving.engine import Engine
-from repro.serving.scheduler import GlobalScheduler
+from typing import Any, Callable, Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -44,13 +51,164 @@ class AutoscalerStats:
     drained: int = 0
 
 
+class LoadSource:
+    """What the controller observes and actuates, independent of runtime."""
+
+    def num_p(self) -> int:
+        raise NotImplementedError
+
+    def num_d(self) -> int:
+        raise NotImplementedError
+
+    def p_queue_depth(self) -> float:
+        """Pending prefills per routable P instance."""
+        raise NotImplementedError
+
+    def d_utilization(self) -> float:
+        """Mean occupied-slot fraction across routable D instances."""
+        raise NotImplementedError
+
+    def recent_ttfts(self) -> List[float]:
+        raise NotImplementedError
+
+    def recent_tpots(self) -> List[float]:
+        raise NotImplementedError
+
+    def grow(self, name: str, role: str, factory: Callable[[str], Any]) -> None:
+        raise NotImplementedError
+
+    def surplus(self, role: str) -> List[str]:
+        """Autoscaler-added instances (newest last) eligible for draining."""
+        raise NotImplementedError
+
+    def drain(self, name: str) -> None:
+        raise NotImplementedError
+
+
+class SchedulerLoadSource(LoadSource):
+    """In-process backend: the ``GlobalScheduler``'s pools and queue."""
+
+    def __init__(self, scheduler):
+        self.sched = scheduler
+
+    def _routable_p(self):
+        return self.sched._routable(self.sched.p_pool)
+
+    def _routable_d(self):
+        return self.sched._routable(self.sched.d_pool)
+
+    def num_p(self) -> int:
+        return len(self._routable_p())
+
+    def num_d(self) -> int:
+        return len(self._routable_d())
+
+    def p_queue_depth(self) -> float:
+        return len(self.sched.pending) / max(self.num_p(), 1)
+
+    def d_utilization(self) -> float:
+        ds = self._routable_d()
+        if not ds:
+            return 1.0
+        return sum(e.load() for e in ds) / len(ds)
+
+    def recent_ttfts(self) -> List[float]:
+        return [r.ttft() for r in self.sched.finished[-16:]
+                if r.ttft() is not None]
+
+    def recent_tpots(self) -> List[float]:
+        return [r.tpot() for r in self.sched.finished[-16:]
+                if r.tpot() is not None]
+
+    def grow(self, name: str, role: str,
+             factory: Callable[[str], Any]) -> None:
+        self.sched.add_instance(
+            factory(name), role="prefill" if role == "P" else "decode")
+
+    def surplus(self, role: str) -> List[str]:
+        pool = self.sched.p_pool if role == "P" else self.sched.d_pool
+        return [n for n in pool if n.startswith(f"{role}-auto")
+                and n not in self.sched._draining]
+
+    def drain(self, name: str) -> None:
+        self.sched.remove_instance(name)
+
+
+class ClusterLoadSource(LoadSource):
+    """Multi-process backend: the ``ClusterRuntime``'s *measured* load —
+    worker heartbeats (each P reports its backlog, each D its occupied
+    slots) plus the parent's pending queue and dispatch bookkeeping —
+    actuated through real process spawn/drain. Factories here return
+    ``EngineSpec``s, not ``Engine``s: the engine is built inside the new
+    worker process."""
+
+    def __init__(self, runtime):
+        self.rt = runtime
+        self._added: Dict[str, str] = {}      # iid → role, newest last
+
+    def num_p(self) -> int:
+        return len(self.rt._routable("P"))
+
+    def num_d(self) -> int:
+        return len(self.rt._routable("D"))
+
+    def p_queue_depth(self) -> float:
+        """Parent's undispatched queue + each P's heartbeat-reported
+        backlog (work dispatched but not yet prefilled), per routable P."""
+        ps = self.rt._routable("P")
+        backlog = len(self.rt._pending) + sum(
+            int(i.load.get("backlog", i.queue_reqs)) for i in ps)
+        return backlog / max(len(ps), 1)
+
+    def d_utilization(self) -> float:
+        ds = self.rt._routable("D")
+        if not ds:
+            return 1.0
+        total = 0.0
+        for i in ds:
+            cap = max(i.spec.engine.max_batch, 1)
+            # heartbeat-measured occupancy when fresh, parent's reserved
+            # count otherwise (heartbeats lag the dispatch edge)
+            total += max(i.load.get("active", 0.0), float(i.active)) / cap
+        return total / len(ds)
+
+    def _finished(self) -> List[Any]:
+        done = [r for r in self.rt._requests.values()
+                if r.finish_time is not None]
+        done.sort(key=lambda r: r.finish_time)
+        return done[-16:]
+
+    def recent_ttfts(self) -> List[float]:
+        return [r.ttft() for r in self._finished() if r.ttft() is not None]
+
+    def recent_tpots(self) -> List[float]:
+        return [r.tpot() for r in self._finished() if r.tpot() is not None]
+
+    def grow(self, name: str, role: str,
+             factory: Callable[[str], Any]) -> None:
+        iid = self.rt.add_instance(factory(name), role)
+        self._added[iid] = role
+
+    def surplus(self, role: str) -> List[str]:
+        return [iid for iid, r in self._added.items()
+                if r == role and iid in self.rt._instances
+                and not self.rt._instances[iid].draining]
+
+    def drain(self, name: str) -> None:
+        self.rt.remove_instance(name)
+        self._added.pop(name, None)
+
+
 class PDAutoscaler:
-    def __init__(self, scheduler: GlobalScheduler,
-                 p_factory: Callable[[str], Engine],
-                 d_factory: Callable[[str], Engine],
+    def __init__(self, scheduler,
+                 p_factory: Callable[[str], Any],
+                 d_factory: Callable[[str], Any],
                  baseline_p: int = 1, baseline_d: int = 1,
                  config: Optional[AutoscalerConfig] = None):
-        self.sched = scheduler
+        # accept either a raw GlobalScheduler (compat) or any LoadSource
+        self.src = scheduler if isinstance(scheduler, LoadSource) \
+            else SchedulerLoadSource(scheduler)
+        self.sched = getattr(self.src, "sched", None)
         self.p_factory = p_factory
         self.d_factory = d_factory
         self.baseline_p = baseline_p
@@ -62,74 +220,51 @@ class PDAutoscaler:
         self._last_grow = -10**9
         self._tick = 0
 
-    # -- observations ------------------------------------------------------ #
-    def _routable_p(self) -> List[Engine]:
-        return self.sched._routable(self.sched.p_pool)
-
-    def _routable_d(self) -> List[Engine]:
-        return self.sched._routable(self.sched.d_pool)
-
-    def p_queue_depth(self) -> float:
-        ps = self._routable_p()
-        return len(self.sched.pending) / max(len(ps), 1)
-
-    def d_utilization(self) -> float:
-        ds = self._routable_d()
-        if not ds:
-            return 1.0
-        return sum(e.load() for e in ds) / len(ds)
-
     # -- control ------------------------------------------------------------ #
     def tick(self) -> Optional[str]:
         """Run one control decision. Returns the action taken, if any."""
         self._tick += 1
-        cfg = self.cfg
+        cfg, src = self.cfg, self.src
         cooled = (self._tick - self._last_grow) >= cfg.cooldown_ticks
-        ttfts = [r.ttft() for r in self.sched.finished[-16:]
-                 if r.ttft() is not None]
-        tpots = [r.tpot() for r in self.sched.finished[-16:]
-                 if r.tpot() is not None]
+        ttfts = src.recent_ttfts()
+        tpots = src.recent_tpots()
         ttft = max(ttfts) if ttfts else 0.0
         tpot = max(tpots) if tpots else 0.0
 
-        if (self.p_queue_depth() > cfg.p_queue_high
+        if (src.p_queue_depth() > cfg.p_queue_high
                 or ttft > cfg.slo_ttft_s * cfg.pressure) \
-                and len(self._routable_p()) < cfg.max_p and cooled:
+                and src.num_p() < cfg.max_p and cooled:
             name = f"P-auto{self._counter}"
             self._counter += 1
-            self.sched.add_instance(self.p_factory(name), role="prefill")
+            src.grow(name, "P", self.p_factory)
             self.stats.grew_p += 1
             self._last_grow = self._tick
             return f"grow-p:{name}"
 
-        if (self.d_utilization() > cfg.d_util_high
+        if (src.d_utilization() > cfg.d_util_high
                 or tpot > cfg.slo_tpot_s * cfg.pressure) \
-                and len(self._routable_d()) < cfg.max_d and cooled:
+                and src.num_d() < cfg.max_d and cooled:
             name = f"D-auto{self._counter}"
             self._counter += 1
-            self.sched.add_instance(self.d_factory(name), role="decode")
+            src.grow(name, "D", self.d_factory)
             self.stats.grew_d += 1
             self._last_grow = self._tick
             return f"grow-d:{name}"
 
         # shrink: sustained idleness, never below the planner baseline
-        busy = self.d_utilization() > cfg.low_util \
-            or self.p_queue_depth() > 0
+        busy = src.d_utilization() > cfg.low_util \
+            or src.p_queue_depth() > 0
         self._idle_ticks = 0 if busy else self._idle_ticks + 1
         if self._idle_ticks >= cfg.cooldown_ticks:
             self._idle_ticks = 0
-            surplus_d = [n for n in self.sched.d_pool
-                         if n.startswith("D-auto")
-                         and n not in self.sched._draining]
-            surplus_p = [n for n in self.sched.p_pool
-                         if n.startswith("P-auto")
-                         and n not in self.sched._draining]
-            if len(self._routable_d()) > self.baseline_d and surplus_d:
-                self.sched.remove_instance(surplus_d[-1])
+            surplus_d = src.surplus("D")
+            surplus_p = src.surplus("P")
+            if src.num_d() > self.baseline_d and surplus_d:
+                src.drain(surplus_d[-1])
                 self.stats.drained += 1
                 return f"drain:{surplus_d[-1]}"
-            if len(self._routable_p()) > self.baseline_p and surplus_p:
-                self.sched.remove_instance(surplus_p[-1])
+            if src.num_p() > self.baseline_p and surplus_p:
+                src.drain(surplus_p[-1])
                 self.stats.drained += 1
                 return f"drain:{surplus_p[-1]}"
         return None

@@ -51,6 +51,54 @@ class DeploymentPlan:
     def ratio(self) -> str:
         return f"{self.n_prefill}P{self.n_decode}D"
 
+    def to_cluster_spec(self, cfg: ModelConfig, *,
+                        p_vendor=None, d_vendor=None,
+                        params_seed: int = 0, num_blocks: int = 256,
+                        max_batch: int = 8, max_seq_len: int = 512,
+                        num_p: Optional[int] = None,
+                        num_d: Optional[int] = None):
+        """Make the plan executable: the chosen instance counts and TP
+        degrees as a ``ClusterSpec`` the multi-process ``ClusterRuntime``
+        launches unmodified. ``num_p``/``num_d`` override the planned
+        counts (the CLI's ``--num-p/--num-d``); vendors default to one
+        profile per stage named after the planned hardware, with the KV
+        shard TP clamped to a divisor of the model's KV heads (stored KV
+        is sharded by head, so the planner's TP may exceed what the KV
+        layout can express)."""
+        # imported here: the serving layer imports the planner for
+        # plan-vs-measured reporting, so a module-level import would cycle
+        from repro.serving.engine import VendorProfile
+        from repro.serving.multiproc.messages import ClusterSpec, EngineSpec
+        if p_vendor is None:
+            p_vendor = VendorProfile(
+                self.p_hw, tp=_kv_tp(cfg, self.prefill.strategy.tp),
+                hardware=self.p_hw)
+        if d_vendor is None:
+            d_vendor = VendorProfile(
+                self.d_hw, tp=_kv_tp(cfg, self.decode.strategy.tp),
+                hardware=self.d_hw)
+        n_p = self.n_prefill if num_p is None else num_p
+        n_d = self.n_decode if num_d is None else num_d
+        common = dict(cfg=cfg, params_seed=params_seed,
+                      num_blocks=num_blocks, max_batch=max_batch,
+                      max_seq_len=max_seq_len)
+        return ClusterSpec(
+            p=tuple(EngineSpec(name=f"{self.p_hw}-p{i}", vendor=p_vendor,
+                               role="prefill", **common)
+                    for i in range(n_p)),
+            d=tuple(EngineSpec(name=f"{self.d_hw}-d{i}", vendor=d_vendor,
+                               role="decode", **common)
+                    for i in range(n_d)))
+
+
+def _kv_tp(cfg: ModelConfig, want: int) -> int:
+    """Largest KV-shard TP ≤ the planned TP that divides the model's KV
+    heads (1 for MLA: the latent KV is not head-sharded)."""
+    if cfg.attention_kind == "mla":
+        return 1
+    heads = max(cfg.num_kv_heads, 1)
+    return max(t for t in range(1, max(want, 1) + 1) if heads % t == 0)
+
 
 def _strategy_space(cfg: ModelConfig, hw: HardwareSpec,
                     max_gpus: int) -> List[ParallelStrategy]:

@@ -45,7 +45,8 @@ def compile_programs(arch: str, shape: str, multi_pod: bool) -> None:
               f"{tot/2**30:.2f} GiB/chip")
 
 
-def demo(connector: str = "inproc", two_process: bool = False) -> None:
+def demo(connector: str = "inproc", two_process: bool = False,
+         num_p: int = None, num_d: int = None, plan: bool = False) -> None:
     import subprocess
     import sys
     root = os.path.join(os.path.dirname(__file__), "..", "..", "..")
@@ -55,6 +56,12 @@ def demo(connector: str = "inproc", two_process: bool = False) -> None:
            "--connector", connector]
     if two_process:
         cmd.append("--two-process")
+    if num_p is not None:
+        cmd += ["--num-p", str(num_p)]
+    if num_d is not None:
+        cmd += ["--num-d", str(num_d)]
+    if plan:
+        cmd.append("--plan")
     subprocess.run(cmd, check=True)
 
 
@@ -70,9 +77,19 @@ def main() -> None:
     ap.add_argument("--two-process", action="store_true",
                     help="--demo only: run the P and D engines in separate "
                          "OS processes (requires --connector shm)")
+    ap.add_argument("--num-p", type=int, default=None,
+                    help="--demo only: prefill worker processes "
+                         "(multi-process runtime; requires --connector shm)")
+    ap.add_argument("--num-d", type=int, default=None,
+                    help="--demo only: decode worker processes "
+                         "(multi-process runtime; requires --connector shm)")
+    ap.add_argument("--plan", action="store_true",
+                    help="--demo only: size the topology with the planner "
+                         "(plan_deployment → to_cluster_spec)")
     args = ap.parse_args()
     if args.demo:
-        demo(args.connector, args.two_process)
+        demo(args.connector, args.two_process, args.num_p, args.num_d,
+             args.plan)
     else:
         compile_programs(args.arch, args.shape, args.multi_pod)
 

@@ -1,16 +1,21 @@
-"""Two-process disaggregated P/D serving runtime.
+"""Multi-instance disaggregated P/D serving runtime.
 
-A parent launcher spawns one P-instance process and one D-instance
-process (``multiprocessing`` spawn context), each running its own
-``Engine`` event loop; the control plane rides ``multiprocessing`` queues
-and the KV data plane rides ``SharedMemoryConnector`` segments (staged by
-the P process, adopted + read by the D process). See ``launcher.py`` for
-the protocol diagram.
+A parent launcher spawns N prefill + M decode worker processes
+(``multiprocessing`` spawn context), each running its own ``Engine``
+event loop; the parent routes each request to the least-loaded P and an
+admitting D (``repro.serving.router``), the control plane rides
+``multiprocessing`` queues with instance-addressed messages, and the KV
+data plane rides ``SharedMemoryConnector`` segments (staged by the
+chosen P process, adopted + read by the chosen D process). See
+``launcher.py`` for the protocol diagram; ``TwoProcessRuntime`` is the
+degenerate 1P+1D cluster kept as the compatibility entry point.
 """
-from repro.serving.multiproc.launcher import (TwoProcessRuntime,  # noqa: F401
+from repro.serving.multiproc.launcher import (ClusterRuntime,  # noqa: F401
+                                              TwoProcessRuntime,
+                                              serve_cluster,
                                               serve_two_process)
-from repro.serving.multiproc.messages import (EngineSpec,  # noqa: F401
-                                              WorkerSpec)
+from repro.serving.multiproc.messages import (ClusterSpec,  # noqa: F401
+                                              EngineSpec, WorkerSpec)
 
-__all__ = ["TwoProcessRuntime", "serve_two_process", "EngineSpec",
-           "WorkerSpec"]
+__all__ = ["ClusterRuntime", "TwoProcessRuntime", "serve_cluster",
+           "serve_two_process", "ClusterSpec", "EngineSpec", "WorkerSpec"]

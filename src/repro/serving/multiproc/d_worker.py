@@ -1,4 +1,4 @@
-"""D-instance worker process: the decode half of the two-process runtime.
+"""D-instance worker process: one decode member of the cluster runtime.
 
 Runs the in-process ``DecodeLoop`` protocol as a real OS event loop, with
 the re-page half of ``StreamedHandoff`` folded in: adopt each announced
@@ -14,6 +14,10 @@ died and its staging vanished), an adopt/read error, or an ``AbortStream``
 for an in-flight handoff all post :class:`StreamFailed` home so the
 scheduler side requeues — the cross-process analogue of the
 ``TransferError`` → requeue path in the single-process scheduler.
+
+All messages home carry this worker's instance id (``src``), and every
+heartbeat carries measured load — occupied slots, free paged blocks, free
+KV-pool bytes — the signal the parent's router picks decode instances by.
 """
 from __future__ import annotations
 
@@ -44,18 +48,27 @@ class _DStream:
 
 
 class DWorker:
-    """Event loop state of the decode worker."""
+    """Event loop state of one decode worker."""
 
     def __init__(self, spec: WorkerSpec, cmd_q, evt_q):
+        import jax
+
         from repro.core.disagg import DisaggPipeline
         from repro.core.transport import SharedMemoryConnector
         self.spec = spec
+        self.iid = spec.iid
         self.cmd_q = cmd_q
         self.evt_q = evt_q
         self.engine = spec.engine.build()
         self.connector = SharedMemoryConnector(**spec.connector_kwargs)
         self.pipeline = DisaggPipeline(self.connector, spec.wire)
         self.streams: Dict[str, _DStream] = {}
+        self.emitted_tokens = 0
+        # measured KV-pool footprint per paged block (exact: taken from the
+        # pools this engine actually allocated) — free_bytes in heartbeats
+        pool_bytes = sum(x.nbytes for x in jax.tree.leaves(self.engine.caches)
+                         if hasattr(x, "nbytes"))
+        self._block_bytes = pool_bytes // max(spec.engine.num_blocks, 1)
         self.stop = False
 
     # -- stream lifecycle -------------------------------------------------- #
@@ -69,14 +82,16 @@ class DWorker:
             self.connector.drop(key)             # adopted: detach only
         self.engine.abort_reservation(st.slot)
         self.streams.pop(st.req.req_id, None)
-        self.evt_q.put(StreamFailed(st.req.req_id, st.attempt, error))
+        self.evt_q.put(StreamFailed(st.req.req_id, st.attempt, error,
+                                    src=self.iid))
 
     def _begin(self, msg: BeginStream) -> None:
         try:
             slot, block_ids = self.engine.reserve_sequence(msg.req,
                                                            msg.seq_len)
         except Exception as e:                    # noqa: BLE001
-            self.evt_q.put(StreamFailed(msg.req.req_id, msg.attempt, repr(e)))
+            self.evt_q.put(StreamFailed(msg.req.req_id, msg.attempt, repr(e),
+                                        src=self.iid))
             return
         self.streams[msg.req.req_id] = _DStream(msg.req, msg.attempt, slot,
                                                 block_ids)
@@ -136,7 +151,8 @@ class DWorker:
                 self.connector.stats.chunks += 1
                 st.pending.popleft()
                 self.evt_q.put(ChunkRepaged(st.req.req_id, st.attempt, key,
-                                            (t0, time.monotonic())))
+                                            (t0, time.monotonic()),
+                                            src=self.iid))
                 progressed = True
             if st.req.req_id in self.streams and st.finalize is not None \
                     and not st.pending:
@@ -166,17 +182,21 @@ class DWorker:
                 return
             self.connector.complete(tkey)
             self.evt_q.put(ChunkRepaged(st.req.req_id, st.attempt, tkey,
-                                        (t0, time.monotonic())))
+                                        (t0, time.monotonic()),
+                                        src=self.iid))
         self.engine.activate_sequence(st.slot, fin.first_token, fin.seq_len)
         self.streams.pop(st.req.req_id)
         # the prefill's token starts the stream (scheduler's
         # _emit_first_token, relocated into the D process)
         st.req.output_tokens.append(fin.first_token)
         self.evt_q.put(TokenEmitted(st.req.req_id, fin.first_token,
-                                    st.attempt, first=True))
+                                    st.attempt, first=True, src=self.iid))
+        self.emitted_tokens += 1
         if st.req.done:
             self.engine.release(st.slot)
-            self.evt_q.put(RequestDone(st.req.req_id, st.attempt))
+            self.evt_q.put(RequestDone(st.req.req_id, st.attempt,
+                                       src=self.iid))
+        self._maybe_fault_exit()
 
     # -- decode ------------------------------------------------------------- #
     def _pump_decode(self) -> bool:
@@ -187,11 +207,25 @@ class DWorker:
         for slot, req, tok in eng.decode_step():
             req.output_tokens.append(tok)
             # this side's req copy froze `retries` at dispatch == the attempt
-            self.evt_q.put(TokenEmitted(req.req_id, tok, req.retries))
+            self.evt_q.put(TokenEmitted(req.req_id, tok, req.retries,
+                                        src=self.iid))
+            self.emitted_tokens += 1
             if req.done:
                 eng.release(slot)
-                self.evt_q.put(RequestDone(req.req_id, req.retries))
+                self.evt_q.put(RequestDone(req.req_id, req.retries,
+                                           src=self.iid))
+            self._maybe_fault_exit()
         return True
+
+    def _maybe_fault_exit(self) -> None:
+        fault = self.spec.fault_exit_after_tokens
+        if fault is not None and self.emitted_tokens >= fault:
+            # die *hard*, mid-decode: the volatile KV dies with this
+            # process, exactly as a decode node loss. Flush the event
+            # queue first so the parent sees the tokens that really left.
+            self.evt_q.close()
+            self.evt_q.join_thread()
+            os._exit(3)
 
     # -- control plane ------------------------------------------------------ #
     def _drain_cmds(self, limit: int = 64) -> bool:
@@ -217,9 +251,23 @@ class DWorker:
                 self._abort(msg)
         return progressed
 
+    def _load(self) -> dict:
+        """Measured load snapshot for the heartbeat: what the router and
+        autoscaler steer by."""
+        eng = self.engine
+        active = sum(1 for r in eng.slot_req if r is not None)
+        free_blocks = eng.allocator.free_blocks
+        return {"active": float(active),
+                "free_slots": float(eng.max_batch - active),
+                "free_blocks": float(free_blocks),
+                "free_bytes": float(free_blocks * self._block_bytes),
+                "pending_repage": float(sum(len(s.pending)
+                                            for s in self.streams.values()))}
+
     # -- main loop ----------------------------------------------------------- #
     def run(self) -> None:
-        self.evt_q.put(Hello("D", os.getpid(), self.engine.name))
+        self.evt_q.put(Hello(self.iid, os.getpid(), self.engine.name,
+                             role="D"))
         last_beat = time.monotonic()
         while not self.stop:
             progressed = self._drain_cmds()
@@ -227,11 +275,11 @@ class DWorker:
             progressed |= self._pump_decode()
             now = time.monotonic()
             if now - last_beat >= self.spec.heartbeat_s:
-                self.evt_q.put(Heartbeat("D"))
+                self.evt_q.put(Heartbeat(self.iid, load=self._load()))
                 last_beat = now
             if not progressed:
                 time.sleep(0.002)                 # idle: don't spin a core
-        self.evt_q.put(WorkerStats("D", self.connector.stats,
+        self.evt_q.put(WorkerStats(self.iid, self.connector.stats,
                                    self.engine.stats.as_dict()))
         self.connector.close()
 

@@ -1,4 +1,4 @@
-"""Control-plane protocol of the two-process P/D serving runtime.
+"""Control-plane protocol of the multi-process P/D serving runtime.
 
 Everything here crosses an OS process boundary through
 ``multiprocessing`` queues, so it is all plain picklable data:
@@ -7,6 +7,9 @@ Everything here crosses an OS process boundary through
     instance (config + vendor profile + a parameter seed; parameters are
     re-initialized deterministically in the worker instead of being
     shipped over the wire).
+  * :class:`ClusterSpec` — an executable N×M topology: the planner's
+    instance allocation (``DeploymentPlan.to_cluster_spec``) in
+    launchable form.
   * :class:`WorkerSpec` — one worker's full recipe: engine, wire format,
     KV-connector kwargs, chunking, heartbeat cadence, fault injection.
   * message dataclasses — the control plane proper. The *data* plane
@@ -14,7 +17,8 @@ Everything here crosses an OS process boundary through
     ``SharedMemoryConnector`` segments, and the control plane only carries
     the segment descriptors (:func:`SharedMemoryConnector.export_descriptor`).
 
-Wire protocol (parent = launcher, P = prefill worker, D = decode worker):
+Wire protocol (parent = launcher/router, P = a prefill worker, D = a
+decode worker — N of the former, M of the latter):
 
   parent→P   SubmitPrefill · ReleaseStaged · Shutdown
   P→parent   Hello · ChunkStaged · PrefillDone · PrefillFailed ·
@@ -24,9 +28,15 @@ Wire protocol (parent = launcher, P = prefill worker, D = decode worker):
   D→parent   Hello · ChunkRepaged · TokenEmitted · RequestDone ·
              StreamFailed · Heartbeat · WorkerStats
 
-Every per-request message carries ``attempt`` (the request's retry
-counter at dispatch) so a crashed attempt's stale messages can never be
-attributed to its requeued successor.
+Every worker→parent message is *instance-addressed*: ``src`` carries the
+instance id (``"P0"``, ``"D1"``, …) so the parent's router can attribute
+it to the right member of the pool — and every per-request message
+carries ``attempt`` (the request's retry counter at dispatch) so a
+crashed attempt's stale messages can never be attributed to its requeued
+successor. Heartbeats additionally carry a ``load`` snapshot (P: backlog
+depth / estimated queued prefill tokens; D: occupied slots / free paged
+blocks / free KV-pool bytes) — the measured feed for the router and the
+autoscaler.
 """
 from __future__ import annotations
 
@@ -64,6 +74,29 @@ class EngineSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """An executable N×M deployment: N prefill + M decode EngineSpecs
+    (heterogeneous vendors allowed — the paper's multi-vendor setting).
+    This is what ``DeploymentPlan.to_cluster_spec()`` emits and what
+    ``ClusterRuntime`` launches."""
+    p: Tuple[EngineSpec, ...]
+    d: Tuple[EngineSpec, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "p", tuple(self.p))
+        object.__setattr__(self, "d", tuple(self.d))
+        if not self.p or not self.d:
+            raise ValueError("ClusterSpec needs at least one prefill and "
+                             "one decode instance")
+        names = [e.name for e in self.p + self.d]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate instance names in cluster: {names}")
+
+    def ratio(self) -> str:
+        return f"{len(self.p)}P{len(self.d)}D"
+
+
+@dataclasses.dataclass(frozen=True)
 class WorkerSpec:
     """Everything one worker process needs, shipped through spawn()."""
     engine: EngineSpec
@@ -71,9 +104,19 @@ class WorkerSpec:
     connector_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
     prefill_chunk: Optional[int] = 16
     heartbeat_s: float = 0.5
+    # instance id on the control plane (defaults to the engine name; the
+    # launcher keeps them unique across the pool)
+    instance_id: str = ""
     # fault injection (tests): P exits hard (os._exit) after staging this
     # many chunks — the "process dies without drop()" conformance path
     fault_exit_after_chunks: Optional[int] = None
+    # fault injection (tests): D exits hard after emitting this many
+    # tokens — the "decode node dies mid-stream, volatile KV lost" path
+    fault_exit_after_tokens: Optional[int] = None
+
+    @property
+    def iid(self) -> str:
+        return self.instance_id or self.engine.name
 
 
 # --------------------------------------------------------------------- #
@@ -87,10 +130,11 @@ class SubmitPrefill:
 @dataclasses.dataclass(frozen=True)
 class ReleaseStaged:
     """D consumed a chunk: the staging segment's creator may free it.
-    ``seq`` is the parent's monotone release counter; P piggybacks the
-    highest seq it has *processed* on its next message home (``ack_seq``),
-    letting the parent prune its crash-cleanup record of unconfirmed
-    releases without any clear-on-heartbeat race."""
+    ``seq`` is the parent's monotone per-instance release counter; the P
+    instance piggybacks the highest seq it has *processed* on its next
+    message home (``ack_seq``), letting the parent prune its
+    crash-cleanup record of unconfirmed releases without any
+    clear-on-heartbeat race."""
     key: str
     seq: int = 0
 
@@ -141,27 +185,36 @@ class AbortStream:
 
 
 # --------------------------------------------------------------------- #
-# workers → parent
+# workers → parent (all instance-addressed via ``src``)
 # --------------------------------------------------------------------- #
 @dataclasses.dataclass(frozen=True)
 class Hello:
-    src: str                              # "P" | "D"
+    src: str                              # instance id ("P0", "D1", …)
     pid: int
     engine_name: str
+    role: str = ""                        # "P" | "D"
 
 
 @dataclasses.dataclass(frozen=True)
 class Heartbeat:
+    """Liveness + measured load. ``load`` is the worker's own view:
+
+      P: ``backlog`` (queued prefills), ``backlog_tokens`` (estimated
+         prompt tokens waiting)
+      D: ``active`` (occupied slots), ``free_slots``, ``free_blocks``,
+         ``free_bytes`` (free KV-pool bytes), ``pending_repage``
+    """
     src: str
     ack_seq: int = 0                      # P only: highest release processed
+    load: Optional[Dict[str, float]] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class ChunkStaged:
     """P staged one chunk. Carries the shared-memory descriptor (for the
-    parent to forward to D) plus wall-clock stage/compute intervals
-    (time.monotonic — comparable across processes on one host) for the
-    launcher's measured-overlap accounting."""
+    parent to forward to the stream's D) plus wall-clock stage/compute
+    intervals (time.monotonic — comparable across processes on one host)
+    for the launcher's measured-overlap accounting."""
     req_id: str
     attempt: int
     index: int
@@ -171,6 +224,7 @@ class ChunkStaged:
     t_stage: Tuple[float, float]
     t_compute: Tuple[float, float]
     ack_seq: int = 0                      # highest ReleaseStaged processed
+    src: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,6 +236,7 @@ class PrefillDone:
     chunks: int
     tail: Optional[Dict[str, Any]]
     ack_seq: int = 0                      # highest ReleaseStaged processed
+    src: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,6 +244,7 @@ class PrefillFailed:
     req_id: str
     attempt: int
     error: str
+    src: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -198,6 +254,7 @@ class ChunkRepaged:
     attempt: int
     key: str
     t_repage: Tuple[float, float]
+    src: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,12 +263,14 @@ class TokenEmitted:
     token: int
     attempt: int
     first: bool = False
+    src: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
 class RequestDone:
     req_id: str
     attempt: int
+    src: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -221,6 +280,7 @@ class StreamFailed:
     req_id: str
     attempt: int
     error: str
+    src: str = ""
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,14 +1,18 @@
-"""P-instance worker process: the prefill half of the two-process runtime.
+"""P-instance worker process: one prefill member of the cluster runtime.
 
 Runs the same protocol as the in-process ``PrefillFlightLoop``, but as a
 real OS event loop: receive a request, drive its ``PrefillStream`` chunk
 by chunk, encode each chunk through the ``DisaggPipeline`` and *stage* it
 into this process's ``SharedMemoryConnector``, then post the segment
-descriptor on the control plane. The D process adopts the segment and
+descriptor on the control plane. A D process adopts the segment and
 reads it; staging is freed only when the parent relays D's consumption
 (``ReleaseStaged``) — which is also the staging pool's backpressure: when
 the pinned pool is full, the P loop blocks on release messages instead of
 overrunning the pool.
+
+All messages home carry this worker's instance id (``src``), and every
+heartbeat carries the measured backlog (queued prefills + their estimated
+prompt tokens) — the load signal the parent's router balances on.
 """
 from __future__ import annotations
 
@@ -29,13 +33,19 @@ class _ShutdownRequested(Exception):
     pass
 
 
+def _est_tokens(req) -> int:
+    patches = req.patches.shape[0] if req.patches is not None else 0
+    return req.prompt_len + patches
+
+
 class PWorker:
-    """Event loop state of the prefill worker."""
+    """Event loop state of one prefill worker."""
 
     def __init__(self, spec: WorkerSpec, cmd_q, evt_q):
         from repro.core.disagg import DisaggPipeline
         from repro.core.transport import SharedMemoryConnector
         self.spec = spec
+        self.iid = spec.iid
         self.cmd_q = cmd_q
         self.evt_q = evt_q
         self.engine = spec.engine.build()
@@ -79,6 +89,12 @@ class PWorker:
                 return
             self._handle(msg)
 
+    def _load(self) -> dict:
+        """Measured backlog snapshot for the heartbeat."""
+        return {"backlog": float(len(self.backlog)),
+                "backlog_tokens": float(sum(_est_tokens(m.req)
+                                            for m in self.backlog))}
+
     # -- data plane -------------------------------------------------------- #
     def _stage_with_backpressure(self, key: str, wire_chunk, meta,
                                  stall_s: float = 30.0) -> int:
@@ -120,7 +136,7 @@ class PWorker:
                     req.req_id, attempt, index, key,
                     self.connector.segment_name(key), nbytes,
                     (t_s0, t_s1), (t_c0, t_c1),
-                    ack_seq=self.release_ack))
+                    ack_seq=self.release_ack, src=self.iid))
                 index += 1
                 self.staged_chunks += 1
                 self._maybe_fault_exit()
@@ -136,11 +152,13 @@ class PWorker:
             self.evt_q.put(PrefillDone(req.req_id, attempt,
                                        int(stream.first_token),
                                        stream.seq_len, index, tail,
-                                       ack_seq=self.release_ack))
+                                       ack_seq=self.release_ack,
+                                       src=self.iid))
         except _ShutdownRequested:
             raise
         except Exception as e:                    # noqa: BLE001 — report home
-            self.evt_q.put(PrefillFailed(req.req_id, attempt, repr(e)))
+            self.evt_q.put(PrefillFailed(req.req_id, attempt, repr(e),
+                                         src=self.iid))
 
     def _maybe_fault_exit(self) -> None:
         fault = self.spec.fault_exit_after_chunks
@@ -155,17 +173,20 @@ class PWorker:
 
     # -- main loop ---------------------------------------------------------- #
     def run(self) -> None:
-        self.evt_q.put(Hello("P", os.getpid(), self.engine.name))
+        self.evt_q.put(Hello(self.iid, os.getpid(), self.engine.name,
+                             role="P"))
         try:
             while not self.stop:
                 if self.backlog:
                     self._run_flight(self.backlog.popleft().req)
                     continue
                 if not self._pump_cmds(timeout=self.spec.heartbeat_s):
-                    self.evt_q.put(Heartbeat("P", ack_seq=self.release_ack))
+                    self.evt_q.put(Heartbeat(self.iid,
+                                             ack_seq=self.release_ack,
+                                             load=self._load()))
         except _ShutdownRequested:
             pass
-        self.evt_q.put(WorkerStats("P", self.connector.stats,
+        self.evt_q.put(WorkerStats(self.iid, self.connector.stats,
                                    self.engine.stats.as_dict()))
         self.connector.close()
 

@@ -1,0 +1,160 @@
+"""Plan-vs-measured reporting for the cluster runtime.
+
+The planner's joint optimization (``plan_deployment``) predicts a
+topology — instance counts, per-instance capacity, stage latencies —
+from closed-form models. The cluster runtime *measures* the same
+quantities while serving: per-instance dispatch counts, heartbeat load
+snapshots, worker engine/transfer stats, request TTFTs. This module puts
+the two side by side so the joint optimization can be validated against
+the running system, and quantifies how evenly the router spread work
+(the utilization-imbalance metric the router benchmark tracks).
+
+Stdlib-only and duck-typed over the runtime: it reads the attributes
+``ClusterRuntime`` exposes (``stats``, ``worker_stats``,
+``transfer_stats``, ``crashes``, ``respawns``) without importing it, so
+the planner layer can consume reports without a serving-layer import.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 on empty input."""
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    idx = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[idx]
+
+
+def imbalance(counts: Dict[str, int]) -> float:
+    """(max − min) / mean over per-instance work counts — 0.0 means the
+    router spread work perfectly evenly, 2.0 (for 2 instances) means one
+    instance did everything."""
+    if not counts:
+        return 0.0
+    vals = list(counts.values())
+    mean = sum(vals) / len(vals)
+    if mean <= 0:
+        return 0.0
+    return (max(vals) - min(vals)) / mean
+
+
+def ttfts_s(requests: List[Any]) -> List[float]:
+    """Measured time-to-first-token per finished request."""
+    out = []
+    for r in requests:
+        if r.first_token_time is not None and r.arrival_time is not None:
+            out.append(r.first_token_time - r.arrival_time)
+    return out
+
+
+def measured_section(runtime: Any, requests: List[Any],
+                     wall_s: Optional[float] = None) -> Dict[str, Any]:
+    """What the cluster actually did, per instance and in aggregate."""
+    p_disp = dict(runtime.stats.p_dispatches)
+    d_disp = dict(runtime.stats.d_dispatches)
+    tt = ttfts_s(requests)
+    sec: Dict[str, Any] = {
+        "n_prefill": len(p_disp),
+        "n_decode": len(d_disp),
+        "submitted": runtime.stats.submitted,
+        "finished": runtime.stats.finished,
+        "failed": runtime.stats.failed,
+        "requeues": runtime.stats.requeues,
+        "crashes": dict(runtime.crashes),
+        "respawns": dict(getattr(runtime, "respawns", {})),
+        "p_dispatches": p_disp,
+        "d_dispatches": d_disp,
+        "p_imbalance": imbalance(p_disp),
+        "d_imbalance": imbalance(d_disp),
+        "ttft_p50_s": percentile(tt, 50),
+        "ttft_p95_s": percentile(tt, 95),
+        "worker_stats": dict(runtime.worker_stats),
+        "transfer": {
+            "chunks": runtime.transfer_stats.chunks,
+            "retries": runtime.transfer_stats.retries,
+            "wall_handoff_seconds":
+                runtime.transfer_stats.wall_handoff_seconds,
+            "wall_overlap_seconds":
+                runtime.transfer_stats.wall_overlap_seconds,
+        },
+    }
+    if wall_s:
+        sec["wall_s"] = wall_s
+        sec["measured_qps"] = runtime.stats.finished / wall_s
+    return sec
+
+
+def plan_section(plan: Any) -> Dict[str, Any]:
+    """The planner's predictions, in the same units as the measurement."""
+    return {
+        "model": plan.model,
+        "ratio": plan.ratio(),
+        "n_prefill": plan.n_prefill,
+        "n_decode": plan.n_decode,
+        "p_hw": plan.p_hw,
+        "d_hw": plan.d_hw,
+        "predicted_ttft_s": plan.prefill.latency_s,
+        "predicted_tpot_s": plan.decode.latency_s,
+        "p_instance_qps": plan.prefill.instance_capacity,
+        "d_instance_qps": plan.decode.instance_capacity,
+        "qps_capacity": plan.qps_capacity,
+        "cost_per_hour": plan.cost_per_hour,
+    }
+
+
+def plan_vs_measured(runtime: Any, requests: List[Any],
+                     plan: Any = None,
+                     wall_s: Optional[float] = None) -> Dict[str, Any]:
+    """Full post-run report: measured cluster behaviour, optionally laid
+    against the ``DeploymentPlan`` that launched it (with deltas where
+    the two describe the same quantity)."""
+    rep: Dict[str, Any] = {"measured": measured_section(runtime, requests,
+                                                        wall_s)}
+    if plan is not None:
+        rep["plan"] = plan_section(plan)
+        m = rep["measured"]
+        rep["deltas"] = {
+            "n_prefill": m["n_prefill"] - plan.n_prefill,
+            "n_decode": m["n_decode"] - plan.n_decode,
+            "ttft_p50_vs_predicted_s":
+                m["ttft_p50_s"] - plan.prefill.latency_s,
+        }
+        if "measured_qps" in m:
+            rep["deltas"]["qps_vs_capacity"] = \
+                m["measured_qps"] - plan.qps_capacity
+    return rep
+
+
+def format_report(rep: Dict[str, Any]) -> str:
+    """Readable multi-line rendering for CLI output."""
+    m = rep["measured"]
+    lines = ["== measured ==",
+             f"  topology     {m['n_prefill']}P{m['n_decode']}D"
+             f"  finished {m['finished']}/{m['submitted']}"
+             f"  requeues {m['requeues']}"
+             f"  crashes P={m['crashes'].get('P', 0)}"
+             f" D={m['crashes'].get('D', 0)}",
+             f"  ttft         p50 {m['ttft_p50_s'] * 1e3:.1f} ms"
+             f"  p95 {m['ttft_p95_s'] * 1e3:.1f} ms",
+             f"  p dispatches {m['p_dispatches']}"
+             f"  (imbalance {m['p_imbalance']:.2f})",
+             f"  d dispatches {m['d_dispatches']}"
+             f"  (imbalance {m['d_imbalance']:.2f})"]
+    if "measured_qps" in m:
+        lines.append(f"  throughput   {m['measured_qps']:.2f} req/s "
+                     f"over {m['wall_s']:.1f} s")
+    if "plan" in rep:
+        p = rep["plan"]
+        lines += ["== planned ==",
+                  f"  topology     {p['ratio']}  ({p['p_hw']} → {p['d_hw']})",
+                  f"  ttft         {p['predicted_ttft_s'] * 1e3:.1f} ms"
+                  f"  capacity {p['qps_capacity']:.2f} req/s"
+                  f"  cost ${p['cost_per_hour']:.2f}/h"]
+        d = rep["deltas"]
+        lines.append(f"== deltas ==\n  n_p {d['n_prefill']:+d}"
+                     f"  n_d {d['n_decode']:+d}"
+                     f"  ttft_p50 {d['ttft_p50_vs_predicted_s'] * 1e3:+.1f} ms")
+    return "\n".join(lines)

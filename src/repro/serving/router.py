@@ -1,0 +1,103 @@
+"""Load-aware P/D routing policy for the multi-instance cluster runtime.
+
+The cluster parent cannot call ``Engine.load()`` / ``Engine.can_admit()``
+— the engines live in other OS processes — so routing runs on *snapshots*:
+the parent's own dispatch bookkeeping (authoritative for admission, since
+heartbeats lag) refreshed by the measured load each worker reports in its
+heartbeats. The policy mirrors the single-process ``GlobalScheduler``:
+
+  * a prompt goes to the P with the least outstanding prefill work —
+    queue depth weighted by estimated prefill tokens per request, i.e.
+    the sum of estimated tokens still queued on that instance;
+  * a stream's D is picked among instances that can admit it (a free
+    slot, enough free paged blocks, the sequence fits) by decode queue
+    depth first and free KV-pool bytes second — the TetriInfer-style
+    per-request instance selection by load.
+
+Pure functions over frozen snapshots so the policy is unit-testable
+without processes and reusable by benchmarks and the autoscaler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.engine import VendorProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class PSnapshot:
+    """One prefill instance's routable state."""
+    iid: str
+    queue_reqs: int                 # dispatched prefills not yet done
+    queue_tokens: int               # estimated prompt tokens among them
+
+
+@dataclasses.dataclass(frozen=True)
+class DSnapshot:
+    """One decode instance's routable state."""
+    iid: str
+    active: int                     # slots reserved or decoding
+    max_batch: int
+    free_blocks: int                # unreserved paged blocks (parent view)
+    block_size: int
+    max_blocks_per_seq: int
+    max_seq_len: int
+    block_bytes: int                # KV bytes per paged block (estimate)
+
+
+def kv_block_bytes(cfg: ModelConfig, vendor: VendorProfile) -> int:
+    """Estimated KV-pool bytes behind one paged block of this instance —
+    enough to compare *free KV-pool bytes* across heterogeneous vendors
+    (different block sizes / dtypes) without touching device pools."""
+    itemsize = np.dtype(vendor.kv_dtype).itemsize
+    if cfg.attention_kind == "mla":
+        per_token = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+    else:
+        per_token = 2 * max(cfg.num_kv_heads, 1) * cfg.hd
+    return per_token * vendor.block_size * max(cfg.num_layers, 1) * itemsize
+
+
+def blocks_needed(seq_total: int, block_size: int,
+                  max_blocks_per_seq: int) -> int:
+    """Paged blocks a sequence of ``seq_total`` tokens reserves — must
+    mirror ``Engine.reserve_sequence`` or parent admission drifts from the
+    worker's allocator."""
+    return min(-(-seq_total // block_size), max_blocks_per_seq)
+
+
+def pick_p(snaps: List[PSnapshot]) -> Optional[str]:
+    """Least-loaded prefill instance: minimal outstanding estimated
+    prefill tokens (queue depth × estimated tokens per queued request),
+    request count breaking ties, instance id making it deterministic."""
+    if not snaps:
+        return None
+    return min(snaps, key=lambda s: (s.queue_tokens, s.queue_reqs, s.iid)).iid
+
+
+def pick_d(snaps: List[DSnapshot], seq_len: int,
+           max_new_tokens: int) -> Optional[Tuple[str, int]]:
+    """Decode instance for a stream of ``seq_len`` prompt tokens +
+    ``max_new_tokens`` budget. Returns ``(iid, blocks_reserved)`` or
+    ``None`` when no instance can admit (caller keeps the request queued).
+
+    Admission mirrors ``Engine.can_admit``; among admissible instances
+    the least-occupied (decode queue depth) wins, free KV-pool bytes
+    breaking ties — an idle instance with a fuller pool still beats a
+    busy one with an emptier pool, matching the single-process router's
+    slot-load primary key."""
+    seq_total = seq_len + max_new_tokens
+    best = None
+    for s in snaps:
+        if seq_total > s.max_seq_len or s.active >= s.max_batch:
+            continue
+        need = blocks_needed(seq_total, s.block_size, s.max_blocks_per_seq)
+        if s.free_blocks < need:
+            continue
+        key = (s.active / s.max_batch, -s.free_blocks * s.block_bytes, s.iid)
+        if best is None or key < best[0]:
+            best = (key, s.iid, need)
+    return None if best is None else (best[1], best[2])

@@ -107,3 +107,48 @@ def test_no_growth_without_pressure(params):
         if sched.stats.finished >= 1:
             break
     assert auto.stats.grew_p == 0 and auto.stats.grew_d == 0
+
+
+def test_cluster_load_source_grows_live_d_process():
+    """Point the same controller at a live multi-process ClusterRuntime:
+    decode-slot pressure (1 D, max_batch=2, 8 requests) must make it spawn
+    a real extra D worker via add_instance, and everything still finishes."""
+    import time
+
+    from repro.core.autoscale import ClusterLoadSource
+    from repro.serving.multiproc import (ClusterRuntime, ClusterSpec,
+                                         EngineSpec)
+
+    vendor = VendorProfile("A", block_size=8)
+    mk = lambda name, role: EngineSpec(name, CFG, vendor, params_seed=0,
+                                       num_blocks=64, max_batch=2,
+                                       max_seq_len=64, role=role)
+    rt = ClusterRuntime(ClusterSpec(p=(mk("P0", "prefill"),),
+                                    d=(mk("D0", "decode"),)),
+                        prefill_chunk=8)
+    try:
+        rt.start()
+        auto = PDAutoscaler(
+            ClusterLoadSource(rt),
+            p_factory=lambda n: mk(n, "prefill"),
+            d_factory=lambda n: mk(n, "decode"),
+            baseline_p=1, baseline_d=1,
+            config=AutoscalerConfig(cooldown_ticks=2, d_util_high=0.5,
+                                    slo_ttft_s=1e9, slo_tpot_s=1e9,
+                                    max_p=1, max_d=2))
+        reqs = _reqs(8)
+        for r in reqs:
+            rt.submit(r)
+        deadline = time.monotonic() + 300.0
+        while rt._unresolved() and time.monotonic() < deadline:
+            rt.step(timeout=0.02)
+            auto.tick()
+        assert rt._unresolved() == 0
+        assert rt.stats.finished == len(reqs) and rt.stats.failed == 0
+        assert auto.stats.grew_d >= 1
+        # the grown member is a real routable worker process
+        d_iids = {i.iid for i in rt._routable("D")}
+        assert "D1" in d_iids and rt.worker_pids.get("D1")
+        assert all(len(r.output_tokens) == r.max_new_tokens for r in reqs)
+    finally:
+        rt.shutdown()

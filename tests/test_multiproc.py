@@ -1,19 +1,24 @@
-"""Two-process P/D serving runtime (repro.serving.multiproc).
+"""Multi-instance P/D serving runtime (repro.serving.multiproc).
 
 The acceptance bar for genuine disaggregation:
 
-  1. *parity*: the two-process runtime (P and D engines in separate OS
+  1. *parity*: the multi-process runtime (P and D engines in separate OS
      processes, control plane over queues, KV data plane over shared
      memory) produces token-exact output vs the single-process
-     ``GlobalScheduler`` serving loop.
+     ``GlobalScheduler`` serving loop — for the degenerate 1P+1D cluster
+     AND a routed 2P×2D cluster.
   2. *failure surfacing*: the P process dying hard (``os._exit``)
      mid-stream must strand no shared-memory segments, the D process must
      surface a transfer failure, and the launcher must requeue — with the
      retry visible in ``TransferStats.retries`` across the process
-     boundary — and still finish every request after the respawn.
+     boundary — and still finish every request after the respawn. A D
+     instance dying in a pool with a *surviving* D must fail over (all
+     streams finish on the survivor, no respawn).
   3. *no leaks*: no named shared-memory segments survive a connector
      ``close()``, nor a connector that is dropped without ``close()``
      (the ``weakref.finalize`` guard).
+  4. *planner round trip*: ``plan_deployment``'s chosen instance counts
+     launch unmodified through ``DeploymentPlan.to_cluster_spec``.
 """
 import gc
 import os
@@ -28,8 +33,10 @@ from repro.core.disagg import DisaggPipeline
 from repro.core.transport import SharedMemoryConnector
 from repro.core.transport.base import TransferStats
 from repro.models import model as M
+from repro.serving import router
 from repro.serving.engine import Engine, VendorProfile
-from repro.serving.multiproc import (EngineSpec, TwoProcessRuntime,
+from repro.serving.multiproc import (ClusterRuntime, ClusterSpec, EngineSpec,
+                                     TwoProcessRuntime, serve_cluster,
                                      serve_two_process)
 from repro.serving.multiproc.launcher import _interval_overlap, _union
 from repro.serving.request import Request
@@ -106,8 +113,8 @@ def test_two_process_token_exact_vs_single_process():
                                    _spec("D0", VENDOR_D, "decode"),
                                    reqs, prefill_chunk=CHUNK,
                                    max_wall_s=300.0)
-    # really two other OS processes
-    assert set(rt.worker_pids) == {"P", "D"}
+    # really two other OS processes, instance-addressed
+    assert set(rt.worker_pids) == {"P0", "D0"}
     assert len({os.getpid(), *rt.worker_pids.values()}) == 3
     assert rt.stats.finished == len(reqs)
     assert tokens == ref
@@ -174,6 +181,149 @@ def test_p_crash_mid_stream_surfaces_failure_and_requeues():
     after = _shm_files()
     if before is not None:
         assert after - before == set()
+
+
+# --------------------------------------------------------------------- #
+# 2b. N×M cluster: routed 2P×2D parity, D-crash failover onto a survivor
+# --------------------------------------------------------------------- #
+def _cluster(n_p, n_d):
+    return ClusterSpec(
+        p=tuple(_spec(f"P{i}", VENDOR_P, "prefill") for i in range(n_p)),
+        d=tuple(_spec(f"D{i}", VENDOR_D, "decode") for i in range(n_d)))
+
+
+def test_cluster_2p2d_token_exact_vs_single_process():
+    """Routing across 2 P and 2 D instances (same seed everywhere) must
+    not change a single token vs the single-process loop."""
+    before = _shm_files()
+    reqs = _requests(n=6)
+    ref = _serve_single(_requests(n=6))
+    tokens, rt = serve_cluster(_cluster(2, 2), reqs, prefill_chunk=CHUNK,
+                               max_wall_s=300.0)
+    # four real worker processes, all instance-addressed
+    assert set(rt.worker_pids) == {"P0", "P1", "D0", "D1"}
+    assert len({os.getpid(), *rt.worker_pids.values()}) == 5
+    assert rt.stats.finished == len(reqs)
+    assert tokens == ref
+    # the router actually used the pool: every dispatch is attributed to
+    # an instance, and with 6 requests × 2 instances both roles spread
+    assert sum(rt.stats.p_dispatches.values()) == len(reqs)
+    assert sum(rt.stats.d_dispatches.values()) == len(reqs)
+    assert len(rt.stats.d_dispatches) == 2      # both Ds served work
+    after = _shm_files()
+    if before is not None:
+        assert after - before == set()
+
+
+def test_d_crash_fails_over_to_surviving_d_without_respawn():
+    """One of two D instances dies hard mid-decode: its streams must
+    re-prefill onto the *surviving* D (generated prefix appended — still
+    token-exact) with no respawn, and every request must finish."""
+    before = _shm_files()
+    reqs = _requests(n=4, max_new=4)
+    ref = _serve_single(_requests(n=4, max_new=4))
+    rt = ClusterRuntime(_cluster(1, 2), prefill_chunk=CHUNK,
+                        fault_exit_after_tokens=3)    # lands on D0
+    rt.start()
+    try:
+        tokens = rt.serve(reqs, max_wall_s=300.0)
+    finally:
+        rt.shutdown()
+    assert rt.crashes["D"] == 1
+    assert rt.respawns["D"] == 0               # survivor took over instead
+    assert "D0" not in rt._instances           # dead member left the pool
+    assert rt.stats.finished == len(reqs)
+    assert rt.stats.failed == 0
+    assert rt.stats.requeues >= 1              # the failover re-prefill
+    for r in reqs:
+        assert len(tokens[r.req_id]) == r.max_new_tokens
+    assert tokens == ref                       # greedy: failover is exact
+    # everything finished on the survivor after the crash
+    after = _shm_files()
+    if before is not None:
+        assert after - before == set()
+
+
+# --------------------------------------------------------------------- #
+# 2c. planner → runtime round trip
+# --------------------------------------------------------------------- #
+def test_plan_to_cluster_spec_launches_planned_topology():
+    from repro.core.planner.hardware import GPU_A, GPU_B
+    from repro.core.planner.optimizer import plan_deployment
+    from repro.core.planner.workload import Workload
+
+    # loose SLOs so the tiny config is feasible on the modeled hardware
+    wl = Workload(qps=0.1, input_len=32, output_len=8,
+                  slo_ttft_s=1e3, slo_tpot_s=1e3)
+    plan = plan_deployment(CFG, wl, GPU_B, GPU_A)
+    spec = plan.to_cluster_spec(CFG, p_vendor=VENDOR_P, d_vendor=VENDOR_D,
+                                params_seed=SEED, num_blocks=64,
+                                max_batch=4, max_seq_len=64)
+    # the planner's instance allocation is what actually launches
+    assert len(spec.p) == plan.n_prefill
+    assert len(spec.d) == plan.n_decode
+    # default vendors: KV-shard TP must divide the model's KV heads even
+    # when the planned compute TP does not
+    auto = plan.to_cluster_spec(CFG)
+    assert CFG.num_kv_heads % auto.p[0].vendor.tp == 0
+    assert CFG.num_kv_heads % auto.d[0].vendor.tp == 0
+    # --num-p/--num-d style override
+    assert len(plan.to_cluster_spec(CFG, num_p=2, num_d=3).p) == 2
+    assert len(plan.to_cluster_spec(CFG, num_p=2, num_d=3).d) == 3
+
+    reqs = _requests(n=3)
+    ref = _serve_single(_requests(n=3))
+    tokens, rt = serve_cluster(spec, reqs, prefill_chunk=CHUNK,
+                               max_wall_s=300.0)
+    assert rt.stats.finished == len(reqs)
+    assert tokens == ref
+
+
+# --------------------------------------------------------------------- #
+# 2d. routing policy (pure, no processes)
+# --------------------------------------------------------------------- #
+def test_pick_p_least_outstanding_tokens():
+    snaps = [router.PSnapshot("P0", queue_reqs=1, queue_tokens=100),
+             router.PSnapshot("P1", queue_reqs=3, queue_tokens=40)]
+    assert router.pick_p(snaps) == "P1"        # tokens beat request count
+    assert router.pick_p([]) is None
+    tie = [router.PSnapshot("P1", 1, 10), router.PSnapshot("P0", 1, 10)]
+    assert router.pick_p(tie) == "P0"          # deterministic tiebreak
+
+
+def _dsnap(iid, active=0, free_blocks=15, max_batch=4, block_size=4,
+           max_seq_len=64, block_bytes=1024):
+    return router.DSnapshot(iid=iid, active=active, max_batch=max_batch,
+                            free_blocks=free_blocks, block_size=block_size,
+                            max_blocks_per_seq=-(-max_seq_len // block_size),
+                            max_seq_len=max_seq_len, block_bytes=block_bytes)
+
+
+def test_pick_d_admission_and_load_order():
+    # seq 20 + 4 new = 24 tokens → 6 blocks of 4
+    assert router.pick_d([_dsnap("D0")], 20, 4) == ("D0", 6)
+    # full batch and too-long sequences are inadmissible
+    assert router.pick_d([_dsnap("D0", active=4)], 20, 4) is None
+    assert router.pick_d([_dsnap("D0")], 80, 4) is None
+    assert router.pick_d([_dsnap("D0", free_blocks=5)], 20, 4) is None
+    # least occupied wins; free KV-pool bytes breaks occupancy ties
+    snaps = [_dsnap("D0", active=2), _dsnap("D1", active=1)]
+    assert router.pick_d(snaps, 20, 4)[0] == "D1"
+    tie = [_dsnap("D0", active=1, free_blocks=6),
+           _dsnap("D1", active=1, free_blocks=12)]
+    assert router.pick_d(tie, 20, 4)[0] == "D1"
+
+
+def test_blocks_needed_mirrors_engine_reservation():
+    eng_spec = _spec("Dx", VENDOR_D, "decode")
+    eng = eng_spec.build()
+    req = Request(req_id="probe",
+                  prompt=np.arange(18, dtype=np.int32) % CFG.vocab_size,
+                  max_new_tokens=5)
+    slot, block_ids = eng.reserve_sequence(req, req.prompt_len)
+    want = router.blocks_needed(req.prompt_len + req.max_new_tokens,
+                                eng.block_size, eng.max_blocks_per_seq)
+    assert len(block_ids) == want
 
 
 # --------------------------------------------------------------------- #
