@@ -1,0 +1,187 @@
+"""Prefix-cache benchmark: a shared-system-prompt workload through the
+single-process P/D serving loop, cache off vs on — measures what the
+shared-prefix KV subsystem actually buys:
+
+  * TTFT p50/p95 (request submit → first decoded token)
+  * wire bytes (KV actually moved P→D over the connector)
+  * prefill compute tokens (P-side forward tokens; cached replay skips)
+  * hit accounting (``TransferStats.prefix_hit_tokens`` / ``bytes_saved``)
+
+Every request shares one system prefix and appends a short unique tail —
+the workload the cache targets (N agents, one system prompt). Requests
+are served *sequentially* so each TTFT is an isolated prefill, not a
+batching artifact. Token parity cached-vs-cold is asserted, not assumed.
+
+Writes ``BENCH_prefix.json`` at the repo root (CI uploads it as an
+artifact). The model is intentionally small: the point is the cache
+path, not the FLOPs.
+
+  PYTHONPATH=src python -m benchmarks.prefix_bench [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.compat.precision import WireFormat
+from repro.core.disagg import DisaggPipeline
+from repro.core.kv_transfer import TransferEngine
+from repro.serving.engine import Engine, VendorProfile
+from repro.serving.multiproc.report import percentile
+from repro.serving.request import Request
+from repro.serving.scheduler import GlobalScheduler
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_prefix.json"
+
+# tiny on purpose: real chunked prefill + wire handoff, minimal FLOPs
+CFG = ModelConfig(name="prefix-bench-tiny", family="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                  d_ff=128, vocab_size=512, param_dtype="float32",
+                  compute_dtype="float32")
+VENDOR_P = VendorProfile("benchB", block_size=8, layout="nhbd",
+                         kv_dtype="float32", tp=2, hardware="gpu-b")
+VENDOR_D = VendorProfile("benchA", block_size=4, layout="nbhd",
+                         kv_dtype="float32", tp=1, hardware="gpu-a")
+SYSTEM_PROMPT_TOKENS = 48
+TAIL_TOKENS = 8
+CHUNK = 8
+
+
+def build_requests(n: int, max_new: int):
+    """One shared system prefix, a unique tail per request."""
+    rng = np.random.default_rng(7)
+    system = rng.integers(0, CFG.vocab_size,
+                          SYSTEM_PROMPT_TOKENS).astype(np.int32)
+    return [Request(req_id=f"bench-{i:03d}",
+                    prompt=np.concatenate(
+                        [system,
+                         rng.integers(0, CFG.vocab_size,
+                                      TAIL_TOKENS).astype(np.int32)]),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _scheduler(prefix_cache: bool):
+    import jax
+
+    from repro.models import model as M
+    params = M.init_params(jax.random.key(0), CFG)
+    mk = lambda name, vendor, role: Engine(
+        name, CFG, params, vendor, num_blocks=128, max_batch=4,
+        max_seq_len=128, role=role, prefix_cache=prefix_cache)
+    sched = GlobalScheduler(DisaggPipeline(TransferEngine(),
+                                           WireFormat("raw", "float32")),
+                            prefill_chunk=CHUNK)
+    sched.add_instance(mk("P0", VENDOR_P, "prefill"))
+    sched.add_instance(mk("D0", VENDOR_D, "decode"))
+    return sched
+
+
+def run_mode(prefix_cache: bool, n_requests: int, max_new: int) -> dict:
+    sched = _scheduler(prefix_cache)
+    # warm the jit caches outside the timed window (same shapes as the run)
+    rng = np.random.default_rng(99)
+    warm = Request(req_id="warm",
+                   prompt=rng.integers(
+                       0, CFG.vocab_size,
+                       SYSTEM_PROMPT_TOKENS + TAIL_TOKENS).astype(np.int32),
+                   max_new_tokens=max_new)
+    sched.submit(warm)
+    for _ in range(500):
+        if warm.state.name in ("FINISHED", "FAILED"):
+            break
+        sched.step()
+    for e in list(sched.p_pool.values()) + list(sched.d_pool.values()):
+        if e.prefix_store is not None:
+            e.prefix_store.evict(len(e.prefix_store))
+        if e.host_prefix_store is not None:
+            e.host_prefix_store.reset()
+    stats0 = sched.pipeline.transfer.stats
+    bytes0 = stats0.bytes_moved
+    p0_tokens = sched.p_pool["P0"].stats.prefill_tokens
+
+    reqs = build_requests(n_requests, max_new)
+    ttfts = []
+    t_run0 = time.perf_counter()
+    for r in reqs:
+        t0 = time.perf_counter()
+        sched.submit(r)
+        for _ in range(2000):
+            if r.first_token_time is not None or r.state.name == "FAILED":
+                break
+            sched.step()
+        ttfts.append(time.perf_counter() - t0)
+        while r.state.name not in ("FINISHED", "FAILED"):
+            sched.step()
+    wall = time.perf_counter() - t_run0
+    if sum(1 for r in reqs if r.state.name == "FINISHED") != len(reqs):
+        raise RuntimeError("benchmark run lost requests")
+
+    out = {
+        "prefix_cache": prefix_cache,
+        "requests": len(reqs),
+        "wall_s": round(wall, 3),
+        "ttft_p50_s": round(percentile(ttfts, 50), 5),
+        "ttft_p95_s": round(percentile(ttfts, 95), 5),
+        "wire_bytes": stats0.bytes_moved - bytes0,
+        "prefill_tokens":
+            sched.p_pool["P0"].stats.prefill_tokens - p0_tokens,
+        "prefix_hit_tokens": stats0.prefix_hit_tokens,
+        "bytes_saved": stats0.bytes_saved,
+    }
+    tokens = {r.req_id: list(r.output_tokens) for r in reqs}
+    return out, tokens
+
+
+def main(out: pathlib.Path = DEFAULT_OUT, n_requests: int = 12,
+         max_new: int = 8) -> dict:
+    results = {}
+    reference = None
+    for prefix_cache in (False, True):
+        label = "cached" if prefix_cache else "cold"
+        print(f"== {label}: {n_requests} requests sharing a "
+              f"{SYSTEM_PROMPT_TOKENS}-token system prompt ==")
+        r, tokens = run_mode(prefix_cache, n_requests, max_new)
+        if reference is None:
+            reference = tokens
+        elif tokens != reference:
+            raise RuntimeError("cached run diverged from cold run")
+        results[label] = r
+        print(f"  ttft p50 {r['ttft_p50_s'] * 1e3:.1f} ms / "
+              f"p95 {r['ttft_p95_s'] * 1e3:.1f} ms, "
+              f"wire {r['wire_bytes']} B, "
+              f"prefill {r['prefill_tokens']} tok, "
+              f"hit {r['prefix_hit_tokens']} tok")
+    doc = {
+        "benchmark": "prefix_cache",
+        "model": CFG.name,
+        "config": {"requests": n_requests, "max_new": max_new,
+                   "system_prompt_tokens": SYSTEM_PROMPT_TOKENS,
+                   "tail_tokens": TAIL_TOKENS, "prefill_chunk": CHUNK},
+        "token_parity": True,
+        "modes": results,
+        "wire_bytes_saved_ratio": round(
+            1.0 - results["cached"]["wire_bytes"]
+            / max(results["cold"]["wire_bytes"], 1), 3),
+    }
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {out}")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller request count (CI smoke)")
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+    n = 6 if args.fast else args.requests
+    main(out=args.out, n_requests=n, max_new=args.max_new)

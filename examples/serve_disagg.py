@@ -80,7 +80,7 @@ def run_single(args, faults: bool):
 
     mk = lambda name, vendor, role: Engine(
         name, CFG, params, vendor, num_blocks=512, max_batch=8,
-        max_seq_len=256, role=role)
+        max_seq_len=256, role=role, prefix_cache=args.prefix_cache)
     p0 = mk("P0", VENDOR_P, "prefill")
     d0 = mk("D0", VENDOR_D, "decode")
 
@@ -160,16 +160,25 @@ def _build_cluster(args):
                                     num_blocks=512, max_batch=8,
                                     max_seq_len=256,
                                     num_p=args.num_p, num_d=args.num_d)
+        if args.prefix_cache:
+            import dataclasses
+            spec = ClusterSpec(
+                p=tuple(dataclasses.replace(e, prefix_cache=True)
+                        for e in spec.p),
+                d=tuple(dataclasses.replace(e, prefix_cache=True)
+                        for e in spec.d))
         return spec, plan
     n_p = args.num_p or 1
     n_d = args.num_d or 1
     spec = ClusterSpec(
         p=tuple(EngineSpec(f"P{i}", CFG, VENDOR_P, params_seed=PARAMS_SEED,
                            num_blocks=512, max_batch=8, max_seq_len=256,
-                           role="prefill") for i in range(n_p)),
+                           role="prefill", prefix_cache=args.prefix_cache)
+                for i in range(n_p)),
         d=tuple(EngineSpec(f"D{i}", CFG, VENDOR_D, params_seed=PARAMS_SEED,
                            num_blocks=512, max_batch=8, max_seq_len=256,
-                           role="decode") for i in range(n_d)))
+                           role="decode", prefix_cache=args.prefix_cache)
+                for i in range(n_d)))
     return spec, plan
 
 
@@ -266,6 +275,11 @@ def main():
                          "and print a plan-vs-measured report")
     ap.add_argument("--plan-qps", type=float, default=0.5,
                     help="workload QPS fed to --plan")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the shared-prefix KV cache on every "
+                         "engine: cache-hit prompt blocks skip prefill "
+                         "compute on P and KV bytes on the wire, and the "
+                         "cluster router scores D-side prefix affinity")
     ap.add_argument("--two-process", action="store_true",
                     help="run the degenerate 1P+1D multi-process runtime "
                          "(alias for --num-p 1 --num-d 1; requires "

@@ -46,7 +46,8 @@ from repro.core.compat import parallel_align, precision
 from repro.core.compat.precision import WireFormat
 from repro.core.transport import KVConnector, TransferHandle
 from repro.serving import paged_cache as PC
-from repro.serving.engine import Engine, kv_entries_with_start
+from repro.serving.engine import (Engine, kv_entries_with_start,
+                                  slice_kv_entries)
 from repro.serving.request import Request
 
 
@@ -323,12 +324,18 @@ class StreamedHandoff:
         self.compute_overlapped = compute_overlapped
         pipeline.transfer.register(p_engine.name, role="prefill")
         pipeline.transfer.register(d_engine.name, role="decode")
-        self.slot, self.block_ids = d_engine.reserve_sequence(req, seq_len)
+        self.slot, self.block_ids = d_engine.reserve_sequence(
+            req, seq_len, use_prefix_cache=True)
+        # prefix tokens already resident on D: chunks below this position
+        # never touch the wire (send_chunk slices / drops them)
+        self.wire_skip = d_engine.slot_prefix_tokens[self.slot]
         self.meta = {"seq_len": seq_len, "tp_p": p_engine.vendor.tp,
                      "wire": pipeline.wire}
         self.chunks_sent = 0
         self.chunks_repaged = 0
         self.bytes = 0
+        self._skipped_tokens = 0
+        self._sent_tokens = 0
         self._pending: Deque[Tuple[str, TransferHandle, float, float]] = \
             collections.deque()
         self._chunk_modeled: List[float] = []
@@ -360,6 +367,19 @@ class StreamedHandoff:
         assert not self._closed, "send_chunk on a closed handoff"
         if self.d_engine.failed:
             raise RuntimeError(f"instance {self.d_engine.name} is down")
+        start, length = chunk["start"], chunk["length"]
+        if self.wire_skip > start:
+            skipped = min(self.wire_skip, start + length) - start
+            self._skipped_tokens += skipped
+            self.pipeline.transfer.stats.prefix_hit_tokens += skipped
+            if start + length <= self.wire_skip:
+                return 0               # fully resident on D: skip the wire
+            chunk = dict(chunk,
+                         kv=slice_kv_entries(chunk["kv"], self.wire_skip,
+                                             start + length),
+                         start=self.wire_skip,
+                         length=start + length - self.wire_skip)
+        self._sent_tokens += chunk["length"]
         while not self.can_send():
             if not self._repage_head(force=True):
                 break                  # channel held by other flights —
@@ -463,6 +483,11 @@ class StreamedHandoff:
         if self._t_first_stage is not None and self._t_last_repage is not None:
             tr.stats.wall_handoff_seconds += \
                 self._t_last_repage - self._t_first_stage
+        if self._skipped_tokens and self._sent_tokens and self.bytes:
+            # the flight's own measured bytes/token prices what the
+            # skipped tokens would have cost on this wire format
+            tr.stats.bytes_saved += int(
+                self.bytes / self._sent_tokens * self._skipped_tokens)
         self._closed = True
         return {"first_token": first_token, "seq_len": self.seq_len,
                 "tp_p": self.meta["tp_p"], "wire": self.pipeline.wire,

@@ -213,6 +213,17 @@ class FrameworkModel:
     prefill_chunk_tokens: int = 512   # chunk size when chunked_prefill
     weight_dtype_bytes: int = 2
 
+    def __post_init__(self):
+        # an out-of-range fraction silently yields a nonsense effective
+        # sequence length (s_eff) in prefill_latency; 1.0 would claim the
+        # whole prompt is cached — prefill always computes ≥ 1 token
+        if not 0.0 <= self.prefix_cache_hit < 1.0:
+            raise ValueError(
+                "FrameworkModel.prefix_cache_hit must be in [0.0, 1.0): "
+                f"got {self.prefix_cache_hit!r} (it is the fraction of "
+                "prompt tokens served from the prefix cache; at least the "
+                "final token is always computed)")
+
     def handoff_exposed_seconds(self, prefill_s: float, transfer_s: float,
                                 input_len: int) -> float:
         """P→D wire time left on the critical path after the prefill.

@@ -64,6 +64,11 @@ class TransferStats:
     wall_overlap_seconds: float = 0.0   # measured wire time under prefill compute
     peak_buffer_bytes: int = 0
     retries: int = 0                # scheduler requeues charged to the wire
+    # shared-prefix cache: tokens whose KV never touched the wire because
+    # the decode side already held them, and the wire bytes that saved
+    # (estimated from the flight's measured bytes/token)
+    prefix_hit_tokens: int = 0
+    bytes_saved: int = 0
 
     @property
     def exposed_modeled_seconds(self) -> float:

@@ -46,7 +46,8 @@ def compile_programs(arch: str, shape: str, multi_pod: bool) -> None:
 
 
 def demo(connector: str = "inproc", two_process: bool = False,
-         num_p: int = None, num_d: int = None, plan: bool = False) -> None:
+         num_p: int = None, num_d: int = None, plan: bool = False,
+         prefix_cache: bool = False) -> None:
     import subprocess
     import sys
     root = os.path.join(os.path.dirname(__file__), "..", "..", "..")
@@ -62,6 +63,8 @@ def demo(connector: str = "inproc", two_process: bool = False,
         cmd += ["--num-d", str(num_d)]
     if plan:
         cmd.append("--plan")
+    if prefix_cache:
+        cmd.append("--prefix-cache")
     subprocess.run(cmd, check=True)
 
 
@@ -86,10 +89,14 @@ def main() -> None:
     ap.add_argument("--plan", action="store_true",
                     help="--demo only: size the topology with the planner "
                          "(plan_deployment → to_cluster_spec)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="--demo only: enable the shared-prefix KV cache "
+                         "(prefill-compute and wire-byte skipping plus "
+                         "cache-aware D routing)")
     args = ap.parse_args()
     if args.demo:
         demo(args.connector, args.two_process, args.num_p, args.num_d,
-             args.plan)
+             args.plan, args.prefix_cache)
     else:
         compile_programs(args.arch, args.shape, args.multi_pod)
 

@@ -23,6 +23,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.serving.paged_cache import BlockAllocator, KVPageSpec
+from repro.serving.prefix_cache import HostPrefixStore, PrefixStore, hashing
 from repro.serving.request import Request, State
 
 
@@ -59,6 +60,8 @@ class EngineStats:
     prefill_seconds: float = 0.0
     decode_seconds: float = 0.0
     failures_injected: int = 0
+    prefix_cached_tokens: int = 0   # prompt tokens replayed from the P-side
+    #                                 host prefix store instead of recomputed
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -155,6 +158,23 @@ class PrefillStream:
         self._tail: Optional[Dict[str, Any]] = None
         self._entries: Optional[List[Tuple]] = None   # monolithic mode
         self._caches = None                           # incremental mode
+        # P-side shared-prefix reuse: replay cached chunks instead of
+        # recomputing them, and seed the dense cache so compute resumes
+        # at the divergence point. Only the incremental path can resume
+        # mid-prompt; the final token is always computed (first_token).
+        self.prefix_tokens = 0
+        self._p_store = None
+        self._cached_entries: Optional[List[Tuple]] = None
+        self._collect: Optional[List[Tuple]] = None
+        store = getattr(engine, "host_prefix_store", None)
+        if (store is not None and self.chunked_compute
+                and req.patches is None and req.frames is None):
+            self._p_store = store
+            self._collect = []
+            hit, entries = store.match(req.prompt, self.seq_len - 1)
+            if hit > 0:
+                self.prefix_tokens = hit
+                self._cached_entries = entries
 
     @property
     def done(self) -> bool:
@@ -168,12 +188,32 @@ class PrefillStream:
     def next_chunk(self) -> Optional[Dict[str, Any]]:
         if self.done:
             return None
-        if self.chunked_compute:
+        if self._next_start < self.prefix_tokens:
+            chunk = self._next_cached()
+        elif self.chunked_compute:
             chunk = self._next_incremental()
         else:
             chunk = self._next_monolithic()
         self.chunks_emitted += 1
+        if self._collect is not None:
+            self._collect.extend(chunk["kv"])
+            if self._next_start >= self.seq_len:
+                self._p_store.insert_prompt(self.req.prompt, self._collect,
+                                            self.seq_len)
         return chunk
+
+    # -- replay from the host prefix store ------------------------------- #
+    def _next_cached(self) -> Dict[str, Any]:
+        eng = self.engine
+        if eng.failed:
+            raise RuntimeError(f"instance {eng.name} is down")
+        c0 = self._next_start
+        c1 = min(c0 + (self.chunk_tokens or self.prefix_tokens),
+                 self.prefix_tokens)
+        self._next_start = c1
+        eng.stats.prefix_cached_tokens += c1 - c0
+        return {"kv": slice_kv_entries(self._cached_entries, c0, c1),
+                "start": c0, "length": c1 - c0, "compute_seconds": 0.0}
 
     # -- monolithic compute, chunked wire ------------------------------- #
     def _next_monolithic(self) -> Dict[str, Any]:
@@ -211,6 +251,8 @@ class PrefillStream:
             # pos=-1 and are masked
             cap = -(-self.seq_len // self.chunk_tokens) * self.chunk_tokens
             self._caches = M.init_caches(cfg, 1, cap, cfg.cdtype)
+            if self.prefix_tokens:
+                self._caches = self._preload_caches(self._caches)
         c0 = self._next_start
         c1 = min(c0 + self.chunk_tokens, self.seq_len)
         tokens = jnp.asarray(req.prompt[c0:c1], jnp.int32)[None]
@@ -242,6 +284,38 @@ class PrefillStream:
         return {"kv": entries, "start": c0, "length": c1 - c0,
                 "compute_seconds": dt}
 
+    def _preload_caches(self, caches):
+        """Seed the dense chunked-prefill cache with the replayed prefix
+        KV so computed chunks resume at ``prefix_tokens`` with the exact
+        bits a cold run would have produced. ``pos`` rows must carry the
+        real absolute positions — attention masks on them."""
+        caches = [list(g) for g in caches]
+        for kind, gi, pi, ent in self._cached_entries:
+            c = caches[gi][pi]
+            s0 = int(ent["start"])
+            if kind == "mla":
+                n = int(np.asarray(ent["ckv"]).shape[1])
+                c = dataclasses.replace(
+                    c,
+                    ckv=c.ckv.at[:, 0, s0:s0 + n].set(
+                        jnp.asarray(ent["ckv"]).astype(c.ckv.dtype)),
+                    kpe=c.kpe.at[:, 0, s0:s0 + n].set(
+                        jnp.asarray(ent["kpe"]).astype(c.kpe.dtype)),
+                    pos=c.pos.at[:, 0, s0:s0 + n].set(
+                        jnp.arange(s0, s0 + n, dtype=c.pos.dtype)))
+            else:
+                n = int(np.asarray(ent["k"]).shape[1])
+                c = dataclasses.replace(
+                    c,
+                    k=c.k.at[:, 0, s0:s0 + n].set(
+                        jnp.asarray(ent["k"]).astype(c.k.dtype)),
+                    v=c.v.at[:, 0, s0:s0 + n].set(
+                        jnp.asarray(ent["v"]).astype(c.v.dtype)),
+                    pos=c.pos.at[:, 0, s0:s0 + n].set(
+                        jnp.arange(s0, s0 + n, dtype=c.pos.dtype)))
+            caches[gi][pi] = c
+        return tuple(tuple(g) for g in caches)
+
 
 class Engine:
     """One model instance with paged KV and slot-based continuous batching."""
@@ -249,7 +323,8 @@ class Engine:
     def __init__(self, name: str, cfg: ModelConfig, params,
                  vendor: VendorProfile, *, num_blocks: int = 256,
                  max_batch: int = 8, max_seq_len: int = 512,
-                 mem_len: int = 0, role: str = "both"):
+                 mem_len: int = 0, role: str = "both",
+                 prefix_cache: bool = False):
         self.name = name
         self.cfg = cfg
         self.params = params
@@ -278,6 +353,19 @@ class Engine:
         self.last_token = np.zeros((max_batch,), np.int32)
         self.stats = EngineStats()
         self.failed = False
+        # shared-prefix KV cache (opt-in): the decode role indexes pool
+        # pages by hash chain; the prefill role keeps host-side wire
+        # entries to replay instead of recomputing
+        self.prefix_cache_enabled = bool(prefix_cache)
+        self.prefix_store: Optional[PrefixStore] = None
+        self.host_prefix_store: Optional[HostPrefixStore] = None
+        if prefix_cache and role in ("decode", "both"):
+            self.prefix_store = PrefixStore(self.allocator, self.block_size)
+        if prefix_cache and role in ("prefill", "both"):
+            self.host_prefix_store = HostPrefixStore(self.block_size)
+        # per-slot prefix tokens already resident at reservation time —
+        # the handoff skips exactly this many tokens on the wire
+        self.slot_prefix_tokens: List[int] = [0] * max_batch
         self._rng = np.random.default_rng(abs(hash(name)) % (2 ** 31))
         self._build_jits()
 
@@ -404,35 +492,127 @@ class Engine:
 
     def can_admit(self, seq_len: int, new_tokens: int) -> bool:
         need = -(-(seq_len + new_tokens) // self.block_size)
+        free = self.allocator.free_blocks
+        if self.prefix_store is not None:
+            # zero-ref cached blocks are reclaimable on demand
+            free += self.prefix_store.evictable_blocks()
         return (not self.failed and len(self.free_slots()) > 0
-                and self.allocator.can_allocate(need)
+                and free >= need
                 and seq_len + new_tokens <= self.max_seq_len)
 
-    def reserve_sequence(self, req: Request, seq_len: int
+    def _prefix_eligible(self, req: Request) -> bool:
+        """Prefix reuse needs resumable (incremental) prefill semantics
+        and a pure-token prompt — mirrors PrefillStream's gate."""
+        return (self.supports_chunked_prefill
+                and req.patches is None and req.frames is None)
+
+    def reserve_sequence(self, req: Request, seq_len: int, *,
+                         use_prefix_cache: bool = False
                          ) -> Tuple[int, np.ndarray]:
         """Claim a decode slot + paged blocks for an in-flight handoff.
 
         The slot is occupied (counts toward load, not free) but NOT decoded
-        until ``activate_sequence`` — streamed KV chunks land in between."""
+        until ``activate_sequence`` — streamed KV chunks land in between.
+
+        With ``use_prefix_cache`` (and a store), the block table's head
+        borrows the store's pages for the longest cached prefix — pinned,
+        read-shared — plus an optional copy-on-write divergence block;
+        ``slot_prefix_tokens[slot]`` records how many leading tokens need
+        no wire transfer. All writes (RMW re-page and decode appends) land
+        at positions ≥ that count, i.e. strictly in private blocks."""
         if self.failed:
             raise RuntimeError(f"instance {self.name} is down")
         slot = self.free_slots()[0]
         nblocks = -(-(seq_len + req.max_new_tokens) // self.block_size)
         nblocks = min(nblocks, self.max_blocks_per_seq)
-        block_ids = self.allocator.allocate(req.req_id, nblocks)
+        store = self.prefix_store
+        prefix_tokens = 0
+        if (use_prefix_cache and store is not None
+                and self._prefix_eligible(req)):
+            # reuse limit seq_len-1: P always computes ≥ 1 trailing token
+            # (it must sample first_token from real logits)
+            match = store.match(req.prompt, min(seq_len, req.prompt_len) - 1)
+            match = match.truncated(max(nblocks - 1, 0), self.block_size)
+            store.acquire(match, req.req_id)
+            shared = list(match.block_ids)
+            need = nblocks - len(shared)
+            short = need - self.allocator.free_blocks
+            if short > 0:
+                store.evict(short)
+            try:
+                private = self.allocator.allocate(req.req_id, need)
+            except MemoryError:
+                store.release_seq(req.req_id)
+                raise
+            if match.cow_src is not None and need > 0:
+                # mid-block divergence: private copy of the source page,
+                # valid up to match.tokens — later rows are overwritten
+                # by the stream's RMW re-page
+                self._copy_block(match.cow_src, private[0])
+            prefix_tokens = match.tokens
+            block_ids = shared + private
+        else:
+            short = nblocks - self.allocator.free_blocks
+            if store is not None and short > 0:
+                store.evict(short)
+            block_ids = self.allocator.allocate(req.req_id, nblocks)
         self.block_tables[slot, :] = self._scratch_block
         self.block_tables[slot, :nblocks] = block_ids
         self.seq_lens[slot] = 0
         self.slot_req[slot] = req
         self.slot_ready[slot] = False
+        self.slot_prefix_tokens[slot] = prefix_tokens
         return slot, np.asarray(block_ids, np.int32)
+
+    def _copy_block(self, src: int, dst: int) -> None:
+        """Copy one physical page across every paged pool (COW)."""
+        caches = [list(g) for g in self.caches]
+        for gi, g in enumerate(caches):
+            for pi, c in enumerate(g):
+                if not isinstance(c, dict):
+                    continue
+                new = dict(c)
+                changed = False
+                for name, arr in c.items():
+                    if name.endswith("_pool"):
+                        # pools stack layers on axis 0: (count, blocks, ...)
+                        new[name] = arr.at[:, dst].set(arr[:, src])
+                        changed = True
+                if changed:
+                    g[pi] = new
+        self.caches = tuple(tuple(g) for g in caches)
 
     def activate_sequence(self, slot: int, first_token: int,
                           seq_len: int) -> None:
-        """All KV landed — the slot joins continuous batching next step."""
+        """All KV landed — the slot joins continuous batching next step.
+
+        With a prefix store, the sequence's full prompt blocks are adopted
+        into it here (ownership transfer, still pinned for this sequence):
+        every block is fully written by now, and decode appends only at
+        positions ≥ seq_len, which live past the last full prompt block."""
         self.seq_lens[slot] = seq_len
         self.last_token[slot] = first_token
         self.slot_ready[slot] = True
+        req = self.slot_req[slot]
+        if (self.prefix_store is not None and req is not None
+                and self._prefix_eligible(req)):
+            self._adopt_prompt_blocks(req, min(seq_len, req.prompt_len), slot)
+
+    def _adopt_prompt_blocks(self, req: Request, prompt_len: int,
+                             slot: int) -> None:
+        store = self.prefix_store
+        prompt = np.asarray(req.prompt)
+        bs = self.block_size
+        parent = hashing.ROOT
+        for b in range(min(prompt_len, len(prompt)) // bs):
+            blk = prompt[b * bs:(b + 1) * bs]
+            digest = hashing.block_hash(parent, blk)
+            # blocks borrowed from the store at reservation re-hash to a
+            # cached digest → insert() is a refresh no-op; only this
+            # sequence's own (private) blocks transfer ownership
+            store.insert(req.req_id, digest, parent, blk,
+                         int(self.block_tables[slot, b]))
+            parent = digest
 
     def abort_reservation(self, slot: int) -> None:
         """Handoff failed mid-stream: free the slot and its blocks."""
@@ -442,6 +622,7 @@ class Engine:
             # not requeue it a second time (two parallel lives)
             self.slot_req[slot] = None
             self.slot_ready[slot] = False
+            self.slot_prefix_tokens[slot] = 0
             return
         self.release(slot)
 
@@ -462,10 +643,16 @@ class Engine:
     def release(self, slot: int) -> None:
         req = self.slot_req[slot]
         if req is not None:
+            if self.prefix_store is not None:
+                # unpin borrowed/adopted prefix blocks (they stay cached
+                # at zero refs until LRU eviction), then free whatever
+                # this sequence still owns privately
+                self.prefix_store.release_seq(req.req_id)
             self.allocator.free(req.req_id)
         self.slot_req[slot] = None
         self.slot_ready[slot] = False
         self.seq_lens[slot] = 0
+        self.slot_prefix_tokens[slot] = 0
         self.block_tables[slot, :] = self._scratch_block
 
     def decode_step(self) -> List[Tuple[int, Request, int]]:
@@ -527,3 +714,7 @@ class Engine:
         self.allocator = BlockAllocator(self.allocator.num_blocks)
         self.allocator.allocate("__scratch__", 1)
         self._scratch_block = self.allocator.blocks_of("__scratch__")[0]
+        if self.prefix_store is not None:
+            # the pages the store indexed died with the pool
+            self.prefix_store = PrefixStore(self.allocator, self.block_size)
+        self.slot_prefix_tokens = [0] * self.max_batch

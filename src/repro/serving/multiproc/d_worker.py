@@ -31,8 +31,9 @@ from repro.serving.multiproc.messages import (AbortStream, BeginStream,
                                               ChunkReady, ChunkRepaged,
                                               FinalizeStream, Heartbeat,
                                               Hello, RequestDone, Shutdown,
-                                              StreamFailed, TokenEmitted,
-                                              WorkerSpec, WorkerStats)
+                                              StreamAccepted, StreamFailed,
+                                              TokenEmitted, WorkerSpec,
+                                              WorkerStats)
 
 
 class _DStream:
@@ -87,14 +88,20 @@ class DWorker:
 
     def _begin(self, msg: BeginStream) -> None:
         try:
-            slot, block_ids = self.engine.reserve_sequence(msg.req,
-                                                           msg.seq_len)
+            slot, block_ids = self.engine.reserve_sequence(
+                msg.req, msg.seq_len, use_prefix_cache=True)
         except Exception as e:                    # noqa: BLE001
             self.evt_q.put(StreamFailed(msg.req.req_id, msg.attempt, repr(e),
                                         src=self.iid))
             return
         self.streams[msg.req.req_id] = _DStream(msg.req, msg.attempt, slot,
                                                 block_ids)
+        # report the resident prefix so the parent can tell the P worker
+        # which leading chunks to keep off the wire entirely (the P side
+        # accounts prefix_hit_tokens/bytes_saved when it actually skips)
+        self.evt_q.put(StreamAccepted(msg.req.req_id, msg.attempt,
+                                      self.engine.slot_prefix_tokens[slot],
+                                      src=self.iid))
 
     def _adopt_chunk(self, msg: ChunkReady) -> None:
         st = self.streams.get(msg.req_id)
@@ -275,7 +282,10 @@ class DWorker:
             progressed |= self._pump_decode()
             now = time.monotonic()
             if now - last_beat >= self.spec.heartbeat_s:
-                self.evt_q.put(Heartbeat(self.iid, load=self._load()))
+                store = self.engine.prefix_store
+                self.evt_q.put(Heartbeat(
+                    self.iid, load=self._load(),
+                    prefix_hashes=None if store is None else store.summary()))
                 last_beat = now
             if not progressed:
                 time.sleep(0.002)                 # idle: don't spin a core

@@ -62,9 +62,9 @@ from repro.serving.multiproc.messages import (AbortStream, BeginStream,
                                               Heartbeat, Hello, PrefillDone,
                                               PrefillFailed, ReleaseStaged,
                                               RequestDone, Shutdown,
-                                              StreamFailed, SubmitPrefill,
-                                              TokenEmitted, WorkerSpec,
-                                              WorkerStats)
+                                              StreamAccepted, StreamFailed,
+                                              SubmitPrefill, TokenEmitted,
+                                              WorkerSpec, WorkerStats)
 from repro.serving.request import Request, State
 from repro.serving.scheduler import SchedulerStats, requeue_for_retry
 
@@ -128,6 +128,9 @@ class _Instance:
     # nothing.
     released: Dict[int, str] = dataclasses.field(default_factory=dict)
     release_seq: int = 0
+    # D only: prefix-store digest summary from the latest heartbeat —
+    # the router's affinity signal (empty when the cache is off or cold)
+    prefix_hashes: frozenset = frozenset()
 
     def alive(self) -> bool:
         return self.proc is not None and self.proc.is_alive()
@@ -147,6 +150,10 @@ class _FlightRecord:
     d_settled: bool = False               # D counters decremented
     phase: str = "prefill"                # prefill → decode
     prefill_done: bool = False
+    # prefix-cache mode: SubmitPrefill is deferred until the D posts
+    # StreamAccepted (carrying the resident-prefix wire skip); True when
+    # the P has been told to start (immediately so with the cache off)
+    submitted: bool = True
     # key → segment of chunks staged but not yet released back to P
     outstanding: Dict[str, str] = dataclasses.field(default_factory=dict)
     # key → segment of EVERY chunk this attempt ever staged (never popped;
@@ -177,6 +184,7 @@ class ClusterRuntime:
                  fault_exit_after_tokens: Optional[int] = None):
         from repro.core.compat.precision import WireFormat
         self.cluster = cluster
+        self._prefix = any(e.prefix_cache for e in cluster.p + cluster.d)
         self._wire = wire or WireFormat("raw", "float32")
         self._ck = dict(connector_kwargs or {})
         self._prefill_chunk = prefill_chunk
@@ -351,7 +359,8 @@ class ClusterRuntime:
                 block_size=e.vendor.block_size,
                 max_blocks_per_seq=-(-e.max_seq_len // e.vendor.block_size),
                 max_seq_len=e.max_seq_len,
-                block_bytes=i.block_bytes))
+                block_bytes=i.block_bytes,
+                prefix_hashes=i.prefix_hashes))
         return snaps
 
     def _dispatch(self) -> None:
@@ -366,8 +375,9 @@ class ClusterRuntime:
             patches = req.patches.shape[0] if req.patches is not None else 0
             seq_len = req.prompt_len + patches
             p_snaps = self._p_snapshots()
-            d_pick = router.pick_d(self._d_snapshots(), seq_len,
-                                   req.max_new_tokens)
+            d_pick = router.pick_d(
+                self._d_snapshots(), seq_len, req.max_new_tokens,
+                prompt=req.prompt if self._prefix else None)
             if d_pick is None or not p_snaps:
                 # nothing can take it *now*; if no D could admit it even
                 # idle, it never fits — fail instead of wedging the queue
@@ -394,7 +404,12 @@ class ClusterRuntime:
             d.reserved_blocks += need
             # FIFO per queue: BeginStream always precedes its ChunkReady
             d.cmd_q.put(BeginStream(req, req.retries, seq_len))
-            p.cmd_q.put(SubmitPrefill(req))
+            if self._prefix:
+                # hold the prefill until the D reports its resident prefix
+                # (StreamAccepted → SubmitPrefill with the wire skip)
+                rec.submitted = False
+            else:
+                p.cmd_q.put(SubmitPrefill(req))
 
     def _settle_p(self, rec: _FlightRecord) -> None:
         """Drop this flight's contribution to its P's router load (once)."""
@@ -440,6 +455,8 @@ class ClusterRuntime:
                     self._prune_released(inst, msg.ack_seq)
                 if msg.load:
                     inst.load = dict(msg.load)
+                if msg.prefix_hashes is not None:
+                    inst.prefix_hashes = frozenset(msg.prefix_hashes)
             return
         if isinstance(msg, WorkerStats):
             self.transfer_stats.merge(msg.transfer)
@@ -524,6 +541,18 @@ class ClusterRuntime:
             self._abort_flight(rec, f"P-side dispatch failure: {msg.error}")
 
     def _handle_d(self, msg: Any, inst: Optional[_Instance]) -> None:
+        if isinstance(msg, StreamAccepted):
+            rec = self._rec_for(msg.req_id, msg.attempt)
+            if rec is None or rec.submitted:
+                return                            # stale, or cache-off mode
+            rec.submitted = True
+            p = self._instances.get(rec.p_id)
+            if p is not None and p.alive() and p.gen == rec.p_gen:
+                p.cmd_q.put(SubmitPrefill(rec.req, msg.wire_skip_tokens))
+            else:                                 # P died while we waited
+                self._abort_flight(
+                    rec, f"P instance {rec.p_id} died before prefill start")
+            return
         if isinstance(msg, ChunkRepaged):
             rec = self._rec_for(msg.req_id, msg.attempt)
             if rec is None:

@@ -25,8 +25,8 @@ decode worker — N of the former, M of the latter):
              Heartbeat · WorkerStats
   parent→D   BeginStream · ChunkReady · FinalizeStream · AbortStream ·
              Shutdown
-  D→parent   Hello · ChunkRepaged · TokenEmitted · RequestDone ·
-             StreamFailed · Heartbeat · WorkerStats
+  D→parent   Hello · StreamAccepted · ChunkRepaged · TokenEmitted ·
+             RequestDone · StreamFailed · Heartbeat · WorkerStats
 
 Every worker→parent message is *instance-addressed*: ``src`` carries the
 instance id (``"P0"``, ``"D1"``, …) so the parent's router can attribute
@@ -60,6 +60,7 @@ class EngineSpec:
     max_batch: int = 8
     max_seq_len: int = 512
     role: str = "both"
+    prefix_cache: bool = False
 
     def build(self):
         """Materialize the engine (worker-side only: imports jax)."""
@@ -70,7 +71,8 @@ class EngineSpec:
         params = M.init_params(jax.random.key(self.params_seed), self.cfg)
         return Engine(self.name, self.cfg, params, self.vendor,
                       num_blocks=self.num_blocks, max_batch=self.max_batch,
-                      max_seq_len=self.max_seq_len, role=self.role)
+                      max_seq_len=self.max_seq_len, role=self.role,
+                      prefix_cache=self.prefix_cache)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +127,9 @@ class WorkerSpec:
 @dataclasses.dataclass(frozen=True)
 class SubmitPrefill:
     req: Request
+    # tokens already resident on the stream's D (prefix cache): the P
+    # worker computes/replays them but never stages them on the wire
+    wire_skip_tokens: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,6 +212,10 @@ class Heartbeat:
     src: str
     ack_seq: int = 0                      # P only: highest release processed
     load: Optional[Dict[str, float]] = None
+    # D only: the prefix store's digest summary (chained block hashes) —
+    # the parent router scores prefix affinity against it. None when the
+    # cache is disabled; a tuple (possibly empty) when enabled.
+    prefix_hashes: Optional[Tuple[str, ...]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,6 +253,18 @@ class PrefillFailed:
     req_id: str
     attempt: int
     error: str
+    src: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamAccepted:
+    """D reserved the stream and reports how many leading prompt tokens
+    its prefix store already holds. In prefix-cache mode the parent
+    defers ``SubmitPrefill`` until this arrives so the P worker knows
+    exactly which chunks to keep off the wire."""
+    req_id: str
+    attempt: int
+    wire_skip_tokens: int = 0
     src: str = ""
 
 

@@ -111,12 +111,16 @@ class PWorker:
                 if self._pump_cmds(timeout=0.05):
                     deadline = time.monotonic() + stall_s
 
-    def _run_flight(self, req) -> None:
+    def _run_flight(self, req, wire_skip: int = 0) -> None:
         """Stream one request's prefill: compute chunk → encode → stage →
-        announce, then the tail + PrefillDone."""
+        announce, then the tail + PrefillDone. ``wire_skip`` leading
+        tokens (already resident on the stream's D via its prefix store)
+        are computed/replayed but never encoded or staged."""
+        from repro.serving.engine import slice_kv_entries
         spec, eng = self.spec, self.engine
         attempt = req.retries
         meta = {"seq_len": 0, "tp_p": eng.vendor.tp, "wire": self.pipeline.wire}
+        skipped_tokens = sent_tokens = sent_bytes = 0
         try:
             stream = eng.prefill_stream(req, spec.prefill_chunk)
             meta["seq_len"] = stream.seq_len
@@ -127,6 +131,22 @@ class PWorker:
                 t_c1 = time.monotonic()
                 if chunk is None:
                     break
+                start, length = chunk["start"], chunk["length"]
+                if wire_skip > start:
+                    cut = min(wire_skip, start + length) - start
+                    skipped_tokens += cut
+                    self.connector.stats.prefix_hit_tokens += cut
+                    if start + length <= wire_skip:
+                        # fully resident on D: nothing for the wire
+                        self._maybe_fault_exit()
+                        self._drain_cmds_nowait()
+                        continue
+                    chunk = dict(chunk,
+                                 kv=slice_kv_entries(chunk["kv"], wire_skip,
+                                                     start + length),
+                                 start=wire_skip,
+                                 length=start + length - wire_skip)
+                sent_tokens += chunk["length"]
                 wire_chunk = self.pipeline.encode_chunk(eng, chunk)
                 key = f"{req.req_id}@{eng.name}#t{attempt}c{index}"
                 t_s0 = time.monotonic()
@@ -139,8 +159,14 @@ class PWorker:
                     ack_seq=self.release_ack, src=self.iid))
                 index += 1
                 self.staged_chunks += 1
+                sent_bytes += nbytes
                 self._maybe_fault_exit()
                 self._drain_cmds_nowait()
+            if skipped_tokens and sent_tokens and sent_bytes:
+                # price the skipped tokens at this flight's measured
+                # bytes/token on this wire format
+                self.connector.stats.bytes_saved += int(
+                    sent_bytes / sent_tokens * skipped_tokens)
             tail_pkg = stream.tail_package()
             tail = None
             if tail_pkg.get("states") or tail_pkg.get("cross"):
@@ -178,7 +204,8 @@ class PWorker:
         try:
             while not self.stop:
                 if self.backlog:
-                    self._run_flight(self.backlog.popleft().req)
+                    m = self.backlog.popleft()
+                    self._run_flight(m.req, m.wire_skip_tokens)
                     continue
                 if not self._pump_cmds(timeout=self.spec.heartbeat_s):
                     self.evt_q.put(Heartbeat(self.iid,

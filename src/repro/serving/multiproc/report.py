@@ -79,8 +79,17 @@ def measured_section(runtime: Any, requests: List[Any],
                 runtime.transfer_stats.wall_handoff_seconds,
             "wall_overlap_seconds":
                 runtime.transfer_stats.wall_overlap_seconds,
+            "prefix_hit_tokens": runtime.transfer_stats.prefix_hit_tokens,
+            "bytes_saved": runtime.transfer_stats.bytes_saved,
         },
     }
+    # measured prefix-cache hit ratio: wire tokens skipped over prompt
+    # tokens submitted — the honest counterpart of the planner's assumed
+    # FrameworkModel.prefix_cache_hit
+    prompt_tokens = sum(getattr(r, "prompt_len", 0) for r in requests)
+    sec["prefix_hit_ratio"] = (
+        runtime.transfer_stats.prefix_hit_tokens / prompt_tokens
+        if prompt_tokens else 0.0)
     if wall_s:
         sec["wall_s"] = wall_s
         sec["measured_qps"] = runtime.stats.finished / wall_s
@@ -143,6 +152,11 @@ def format_report(rep: Dict[str, Any]) -> str:
              f"  (imbalance {m['p_imbalance']:.2f})",
              f"  d dispatches {m['d_dispatches']}"
              f"  (imbalance {m['d_imbalance']:.2f})"]
+    if m["transfer"].get("prefix_hit_tokens"):
+        lines.append(
+            f"  prefix cache {m['transfer']['prefix_hit_tokens']} wire "
+            f"tokens skipped (hit ratio {m['prefix_hit_ratio']:.2f}, "
+            f"{m['transfer']['bytes_saved']} B saved)")
     if "measured_qps" in m:
         lines.append(f"  throughput   {m['measured_qps']:.2f} req/s "
                      f"over {m['wall_s']:.1f} s")

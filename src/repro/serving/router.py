@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.serving.engine import VendorProfile
+from repro.serving.prefix_cache import hashing
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +48,11 @@ class DSnapshot:
     max_blocks_per_seq: int
     max_seq_len: int
     block_bytes: int                # KV bytes per paged block (estimate)
+    # chained prefix-block digests this instance's prefix store holds
+    # (heartbeat-reported; empty when the cache is off or cold). Chained
+    # hashing makes set membership sufficient: a prompt's leading chain
+    # run inside this set IS its longest cached prefix on that instance.
+    prefix_hashes: frozenset = frozenset()
 
 
 def kv_block_bytes(cfg: ModelConfig, vendor: VendorProfile) -> int:
@@ -78,18 +84,24 @@ def pick_p(snaps: List[PSnapshot]) -> Optional[str]:
     return min(snaps, key=lambda s: (s.queue_tokens, s.queue_reqs, s.iid)).iid
 
 
-def pick_d(snaps: List[DSnapshot], seq_len: int,
-           max_new_tokens: int) -> Optional[Tuple[str, int]]:
+def pick_d(snaps: List[DSnapshot], seq_len: int, max_new_tokens: int,
+           prompt=None) -> Optional[Tuple[str, int]]:
     """Decode instance for a stream of ``seq_len`` prompt tokens +
     ``max_new_tokens`` budget. Returns ``(iid, blocks_reserved)`` or
     ``None`` when no instance can admit (caller keeps the request queued).
 
     Admission mirrors ``Engine.can_admit``; among admissible instances
-    the least-occupied (decode queue depth) wins, free KV-pool bytes
-    breaking ties — an idle instance with a fuller pool still beats a
-    busy one with an emptier pool, matching the single-process router's
-    slot-load primary key."""
+    prefix affinity wins first (when ``prompt`` is given and an instance
+    advertises cached prefix digests: tokens of the prompt's longest
+    chain run inside the instance's digest set — those tokens skip the
+    wire entirely, which beats any load delta), then the least-occupied
+    (decode queue depth), free KV-pool bytes breaking ties — an idle
+    instance with a fuller pool still beats a busy one with an emptier
+    pool, matching the single-process router's slot-load primary key.
+    With no prompt or all-cold stores every affinity is 0 and the legacy
+    ordering is preserved bit-for-bit."""
     seq_total = seq_len + max_new_tokens
+    chains = {}     # block_size -> prompt digest chain (computed lazily)
     best = None
     for s in snaps:
         if seq_total > s.max_seq_len or s.active >= s.max_batch:
@@ -97,7 +109,17 @@ def pick_d(snaps: List[DSnapshot], seq_len: int,
         need = blocks_needed(seq_total, s.block_size, s.max_blocks_per_seq)
         if s.free_blocks < need:
             continue
-        key = (s.active / s.max_batch, -s.free_blocks * s.block_bytes, s.iid)
+        affinity = 0
+        if prompt is not None and s.prefix_hashes:
+            chain = chains.get(s.block_size)
+            if chain is None:
+                chain = hashing.chain_hashes(prompt, s.block_size,
+                                             limit=max(seq_len - 1, 0))
+                chains[s.block_size] = chain
+            affinity = hashing.matched_prefix_tokens(
+                chain, s.prefix_hashes, s.block_size)
+        key = (-affinity, s.active / s.max_batch,
+               -s.free_blocks * s.block_bytes, s.iid)
         if best is None or key < best[0]:
             best = (key, s.iid, need)
     return None if best is None else (best[1], best[2])

@@ -314,7 +314,20 @@ class GlobalScheduler:
     def _pick_d(self, req: Request, seq_len: int) -> Optional[Engine]:
         cands = [e for e in self._routable(self.d_pool)
                  if e.can_admit(seq_len, req.max_new_tokens)]
-        return min(cands, key=self._penalty) if cands else None
+
+        def key(e: Engine):
+            # prefix affinity first: the D already holding the longest
+            # cached prefix of this prompt saves wire bytes and decode
+            # pool pages — load/straggler penalty breaks ties (and wins
+            # outright when no D holds anything: affinity 0 everywhere
+            # keeps the legacy ordering)
+            hit = 0
+            if e.prefix_store is not None and e._prefix_eligible(req):
+                hit = e.prefix_store.match_tokens(
+                    req.prompt, min(seq_len, req.prompt_len) - 1)
+            return (-hit, self._penalty(e))
+
+        return min(cands, key=key) if cands else None
 
     # -- lifecycle ---------------------------------------------------------- #
     def submit(self, req: Request) -> None:

@@ -244,6 +244,37 @@ def test_d_crash_fails_over_to_surviving_d_without_respawn():
         assert after - before == set()
 
 
+def test_d_crash_failover_retry_resumes_from_prefix_cache():
+    """With the prefix cache on, a failover retry must not pay for the
+    whole prompt again: the re-prefill replays from P's prefix store
+    (at least one full block skipped) and stays token-exact."""
+    reqs = _requests(n=4, max_new=4)
+    ref = _serve_single(_requests(n=4, max_new=4))
+    pspec = lambda name, vendor, role: EngineSpec(
+        name, CFG, vendor, params_seed=SEED, num_blocks=64, max_batch=4,
+        max_seq_len=64, role=role, prefix_cache=True)
+    spec = ClusterSpec(
+        p=(pspec("P0", VENDOR_P, "prefill"),),
+        d=tuple(pspec(f"D{i}", VENDOR_D, "decode") for i in range(2)))
+    rt = ClusterRuntime(spec, prefill_chunk=CHUNK,
+                        fault_exit_after_tokens=3)
+    rt.start()
+    try:
+        tokens = rt.serve(reqs, max_wall_s=300.0)
+    finally:
+        rt.shutdown()
+    assert rt.crashes["D"] == 1
+    assert rt.respawns["D"] == 0               # survivor took over
+    assert rt.stats.finished == len(reqs)
+    assert rt.stats.failed == 0
+    assert rt.stats.requeues >= 1
+    assert tokens == ref                       # cached replay is exact
+    # the retry resumed from the longest cached prefix instead of
+    # recomputing the prompt from scratch
+    assert rt.worker_stats["P0"]["prefix_cached_tokens"] \
+        >= VENDOR_P.block_size
+
+
 # --------------------------------------------------------------------- #
 # 2c. planner → runtime round trip
 # --------------------------------------------------------------------- #

@@ -1,0 +1,436 @@
+"""Shared-prefix KV cache subsystem (repro.serving.prefix_cache).
+
+The acceptance bar:
+
+  1. *token parity*: serving with the cache on is bit-identical to
+     serving cold — across raw/bf16/int8 wire formats, through the COW
+     mid-block divergence path, and across OS processes.
+  2. *real skipping*: a D-resident prefix keeps its chunks off the wire
+     (``TransferStats.prefix_hit_tokens`` / ``bytes_saved``) and a
+     P-resident prefix skips the prefill forward pass
+     (``EngineStats.prefix_cached_tokens``).
+  3. *safety*: eviction never frees a pinned block; the store's pages
+     and the allocator's free list always partition the pool.
+  4. *affinity*: the cluster router lands same-prefix requests on the D
+     instance already holding their prefix.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.compat.precision import WireFormat
+from repro.core.disagg import DisaggPipeline
+from repro.core.kv_transfer import TransferEngine
+from repro.models import model as M
+from repro.serving import router
+from repro.serving.engine import Engine, VendorProfile
+from repro.serving.paged_cache import BlockAllocator
+from repro.serving.prefix_cache import (STORE_OWNER, HostPrefixStore,
+                                        PrefixStore, hashing)
+from repro.serving.request import Request
+from repro.serving.scheduler import GlobalScheduler
+from tests.conftest import TINY_FAMILIES
+
+CFG = TINY_FAMILIES["dense"]
+VENDOR_P = VendorProfile("B", block_size=8, layout="nhbd",
+                         kv_dtype="float32", tp=2)
+VENDOR_D = VendorProfile("A", block_size=4, layout="nbhd",
+                         kv_dtype="float32", tp=1)
+SEED = 0
+CHUNK = 8
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.key(SEED), CFG)
+
+
+# --------------------------------------------------------------------- #
+# 1. chained hashing
+# --------------------------------------------------------------------- #
+def test_chain_hashes_one_digest_per_full_block():
+    toks = np.arange(20, dtype=np.int32)
+    chain = hashing.chain_hashes(toks, 8)
+    assert len(chain) == 2                     # 20 // 8 full blocks
+    # stable across dtype of the same token values
+    assert chain == hashing.chain_hashes(toks.astype(np.int64), 8)
+    # the chain is positional: same block content, different parent
+    other = hashing.chain_hashes(np.concatenate([toks[8:16], toks[:8]]), 8)
+    assert chain[0] != other[0]
+    # limit truncates before hashing
+    assert hashing.chain_hashes(toks, 8, limit=15) == chain[:1]
+
+
+def test_matched_prefix_tokens_counts_leading_run_only():
+    toks = np.arange(32, dtype=np.int32)
+    chain = hashing.chain_hashes(toks, 8)
+    assert hashing.matched_prefix_tokens(chain, set(chain), 8) == 32
+    assert hashing.matched_prefix_tokens(chain, set(chain[:2]), 8) == 16
+    # a hole in the chain stops the run even if later digests are cached
+    holed = {chain[0], chain[2], chain[3]}
+    assert hashing.matched_prefix_tokens(chain, holed, 8) == 8
+    assert hashing.matched_prefix_tokens(chain, set(), 8) == 0
+
+
+# --------------------------------------------------------------------- #
+# 2. PrefixStore: pinning, LRU eviction, COW detection, allocator
+#    invariants
+# --------------------------------------------------------------------- #
+def _insert_prompt(store, alloc, seq_id, prompt):
+    """Simulate adoption: allocate blocks for the full prompt blocks and
+    insert them under their chained digests."""
+    bs = store.block_size
+    full = len(prompt) // bs
+    blocks = alloc.allocate(seq_id, full)
+    parent = hashing.ROOT
+    for b in range(full):
+        blk = prompt[b * bs:(b + 1) * bs]
+        digest = hashing.block_hash(parent, blk)
+        store.insert(seq_id, digest, parent, blk, blocks[b])
+        parent = digest
+    return blocks
+
+
+def test_store_match_acquire_release_and_lru_eviction():
+    alloc = BlockAllocator(8)
+    store = PrefixStore(alloc, block_size=4)
+    p1 = np.arange(8, dtype=np.int32)
+    p2 = np.concatenate([p1[:4], np.arange(100, 104, dtype=np.int32)])
+    _insert_prompt(store, alloc, "s1", p1)
+    store.release_seq("s1")
+    alloc.free("s1")                           # no-op: all blocks adopted
+    _insert_prompt(store, alloc, "s2", p2)     # shares block 0's digest
+    store.release_seq("s2")
+    alloc.free("s2")                           # its duplicate head block
+    assert len(store) == 3                     # shared head cached once
+    assert alloc.blocks_of(STORE_OWNER) and alloc.free_blocks == 8 - 3
+
+    m = store.match(p1, limit=8)
+    assert m.tokens == 8 and len(m.block_ids) == 2
+    store.acquire(m, "reader")
+    # pinned blocks never evict; the unpinned third block does
+    assert store.evict(10) == 1
+    assert len(store) == 2
+    assert store.match(p1, limit=8).tokens == 8
+    store.release_seq("reader")
+    assert store.evict(10) == 2
+    assert alloc.free_blocks == 8              # everything back in the pool
+    assert not alloc.blocks_of(STORE_OWNER)
+
+
+def test_store_match_detects_mid_block_divergence_as_cow():
+    alloc = BlockAllocator(8)
+    store = PrefixStore(alloc, block_size=4)
+    p1 = np.arange(8, dtype=np.int32)
+    blocks = _insert_prompt(store, alloc, "s1", p1)
+    store.release_seq("s1")
+    # diverges inside the second block: full-block chain stops at 4,
+    # the divergence block extends the match copy-on-write
+    p2 = np.array([0, 1, 2, 3, 4, 5, 99, 98], dtype=np.int32)
+    m = store.match(p2, limit=8)
+    assert m.tokens == 6
+    assert len(m.block_ids) == 1
+    assert m.cow_src == blocks[1] and m.cow_len == 2
+    # truncation below the matched depth drops blocks AND the COW
+    # extension; a match that already fits is returned unchanged
+    t = m.truncated(0, store.block_size)
+    assert t.tokens == 0 and t.cow_src is None and not t.block_ids
+    assert m.truncated(1, store.block_size) is m
+
+
+def test_store_insert_is_refresh_noop_for_cached_digest():
+    alloc = BlockAllocator(8)
+    store = PrefixStore(alloc, block_size=4)
+    p = np.arange(4, dtype=np.int32)
+    _insert_prompt(store, alloc, "s1", p)
+    store.release_seq("s1")
+    # second sequence re-derives the same digest for its private block:
+    # insert must refuse (no double-index), leaving ownership untouched
+    mine = alloc.allocate("s2", 1)
+    digest = hashing.block_hash(hashing.ROOT, p)
+    assert store.insert("s2", digest, hashing.ROOT, p, mine[0]) is False
+    assert alloc.blocks_of("s2") == mine
+    assert len(store) == 1
+
+
+# --------------------------------------------------------------------- #
+# 3. single-process serving: parity + skipping across wire formats
+# --------------------------------------------------------------------- #
+def _sched(params, prefix_cache, wire, num_blocks=64):
+    mk = lambda name, vendor, role: Engine(
+        name, CFG, params, vendor, num_blocks=num_blocks, max_batch=4,
+        max_seq_len=64, role=role, prefix_cache=prefix_cache)
+    sched = GlobalScheduler(DisaggPipeline(TransferEngine(), wire),
+                            prefill_chunk=CHUNK)
+    sched.add_instance(mk("P0", VENDOR_P, "prefill"))
+    sched.add_instance(mk("D0", VENDOR_D, "decode"))
+    return sched
+
+
+def _serve_sequentially(sched, reqs, max_ticks=400):
+    for r in reqs:
+        sched.submit(r)
+        for _ in range(max_ticks):
+            if r.state.name in ("FINISHED", "FAILED"):
+                break
+            sched.step()
+        assert r.state.name == "FINISHED"
+    return {r.req_id: list(r.output_tokens) for r in reqs}
+
+
+def _shared_prefix_reqs(n=3, shared=40, tail=4, max_new=4, seed=11):
+    rng = np.random.default_rng(seed)
+    head = rng.integers(0, CFG.vocab_size, shared).astype(np.int32)
+    return [Request(req_id=f"q{i}",
+                    prompt=np.concatenate(
+                        [head, rng.integers(0, CFG.vocab_size,
+                                            tail).astype(np.int32)]),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("wire", [WireFormat("raw", "float32"),
+                                  WireFormat("raw", "bfloat16"),
+                                  WireFormat("int8")],
+                         ids=["raw-f32", "raw-bf16", "int8"])
+def test_cached_vs_cold_token_parity_across_wire_formats(params, wire):
+    """The cache must never change a token: the D store holds exactly the
+    bits the wire delivered, so reuse is bit-stable per wire format."""
+    ref = _serve_sequentially(_sched(params, False, wire),
+                              _shared_prefix_reqs())
+    sched = _sched(params, True, wire)
+    got = _serve_sequentially(sched, _shared_prefix_reqs())
+    assert got == ref
+    # the shared 40 tokens of requests 2 and 3 skipped the wire, and the
+    # P engine skipped their forward pass
+    assert sched.pipeline.transfer.stats.prefix_hit_tokens >= 2 * 40
+    assert sched.pipeline.transfer.stats.bytes_saved > 0
+    assert sched.p_pool["P0"].stats.prefix_cached_tokens >= 2 * 40
+
+
+def test_mid_block_divergence_takes_cow_path(params):
+    """Prompts diverging inside a D block must reuse past the block
+    boundary (COW page copy) and stay token-exact."""
+    rng = np.random.default_rng(3)
+    head = rng.integers(0, CFG.vocab_size, 16).astype(np.int32)
+    mk = lambda i, tail: Request(req_id=f"q{i}",
+                                 prompt=np.concatenate([head, tail]),
+                                 max_new_tokens=4)
+    # both prompts share 18 tokens — not a multiple of D's block_size 4
+    reqs = lambda: [mk(0, np.array([7, 9, 11, 13], np.int32)),
+                    mk(1, np.array([7, 9, 20, 21], np.int32))]
+    wire = WireFormat("raw", "float32")
+    ref = _serve_sequentially(_sched(params, False, wire), reqs())
+    sched = _sched(params, True, wire)
+    got = _serve_sequentially(sched, reqs())
+    assert got == ref
+    # 18 shared tokens: 4 full blocks + a 2-token COW extension
+    assert sched.pipeline.transfer.stats.prefix_hit_tokens == 18
+    d = sched.d_pool["D0"]
+    assert d.prefix_store.hit_tokens == 18
+
+
+def test_eviction_under_pressure_never_breaks_serving(params):
+    """A pool barely larger than one sequence forces the store to evict
+    on every reservation; distinct prompts must all still finish and the
+    allocator must stay consistent."""
+    wire = WireFormat("raw", "float32")
+    # 44 prompt + 4 new = 48 tokens → 12 D-blocks; 16-block pool leaves
+    # almost nothing for the store without on-demand eviction
+    sched = _sched(params, True, wire, num_blocks=16)
+    rng = np.random.default_rng(5)
+    reqs = [Request(req_id=f"q{i}",
+                    prompt=rng.integers(0, CFG.vocab_size,
+                                        44).astype(np.int32),
+                    max_new_tokens=4)
+            for i in range(4)]
+    _serve_sequentially(sched, reqs)
+    d = sched.d_pool["D0"]
+    assert d.prefix_store.evicted_blocks > 0   # pressure really evicted
+    # pool partition invariant: free + store-owned + scratch == all
+    owned = len(d.allocator.blocks_of(STORE_OWNER))
+    assert d.allocator.free_blocks + owned == 16 - 1
+
+
+def test_requeue_resumes_from_cached_prefix(params):
+    """The retry of a failed D stream extends the original prompt, so the
+    P host store replays the original prefill instead of recomputing it."""
+    wire = WireFormat("raw", "float32")
+    sched = _sched(params, True, wire)
+    reqs = _shared_prefix_reqs(n=2, max_new=6)
+    _serve_sequentially(sched, [reqs[0]])
+    p = sched.p_pool["P0"]
+    replayed_before = p.stats.prefix_cached_tokens
+    d = sched.d_pool["D0"]
+    sched.submit(reqs[1])
+    for _ in range(3):
+        sched.step()
+    d.fail()                                   # volatile KV gone mid-flight
+    for _ in range(400):
+        if sched.stats.finished >= 2:
+            break
+        sched.step()
+    assert sched.stats.finished == 2
+    assert sched.stats.requeues >= 1
+    # the retry's prefill replayed ≥ the original's cached full blocks
+    # instead of recomputing the whole (prompt + generated-prefix) prompt
+    assert p.stats.prefix_cached_tokens > replayed_before
+
+
+# --------------------------------------------------------------------- #
+# 4. router affinity (pure, no processes)
+# --------------------------------------------------------------------- #
+def _dsnap(iid, prompt_blocks=0, prompt=None, active=0, free_blocks=15,
+           block_size=4):
+    hashes = frozenset()
+    if prompt is not None and prompt_blocks:
+        hashes = frozenset(
+            hashing.chain_hashes(prompt, block_size)[:prompt_blocks])
+    return router.DSnapshot(iid=iid, active=active, max_batch=4,
+                            free_blocks=free_blocks, block_size=block_size,
+                            max_blocks_per_seq=16, max_seq_len=64,
+                            block_bytes=1024, prefix_hashes=hashes)
+
+
+def test_pick_d_prefix_affinity_beats_load():
+    prompt = np.arange(24, dtype=np.int32)
+    warm_busy = _dsnap("D0", prompt_blocks=4, prompt=prompt, active=2)
+    cold_idle = _dsnap("D1", active=0)
+    got = router.pick_d([warm_busy, cold_idle], 24, 4, prompt=prompt)
+    assert got[0] == "D0"                      # affinity beats occupancy
+    # no prompt → affinity off → legacy load ordering is preserved
+    assert router.pick_d([warm_busy, cold_idle], 24, 4)[0] == "D1"
+    # foreign hashes score zero: legacy ordering again
+    other = _dsnap("D0", prompt_blocks=4,
+                   prompt=np.arange(100, 124, dtype=np.int32), active=2)
+    assert router.pick_d([other, cold_idle], 24, 4, prompt=prompt)[0] == "D1"
+
+
+def test_pick_d_affinity_tiebreaks_by_longest_prefix():
+    prompt = np.arange(32, dtype=np.int32)
+    short = _dsnap("D0", prompt_blocks=2, prompt=prompt)
+    long = _dsnap("D1", prompt_blocks=6, prompt=prompt)
+    assert router.pick_d([short, long], 32, 4, prompt=prompt)[0] == "D1"
+
+
+# --------------------------------------------------------------------- #
+# 5. cross-process: the cache through real worker processes
+# --------------------------------------------------------------------- #
+def _spec(name, vendor, role, prefix_cache=True):
+    from repro.serving.multiproc import EngineSpec
+    return EngineSpec(name, CFG, vendor, params_seed=SEED, num_blocks=64,
+                      max_batch=4, max_seq_len=64, role=role,
+                      prefix_cache=prefix_cache)
+
+
+def test_cross_process_cached_vs_cold_token_parity_and_skipping(params):
+    """Acceptance: over real OS processes, a shared 40-token prefix must
+    (a) change no token vs the cold single-process loop, (b) keep ≥ the
+    shared blocks off the wire (``prefix_hit_tokens``/``bytes_saved``),
+    and (c) skip the P-side forward pass for the resident prefix."""
+    from repro.serving.multiproc import TwoProcessRuntime
+    wire = WireFormat("raw", "float32")
+    ref = _serve_sequentially(_sched(params, False, wire),
+                              _shared_prefix_reqs())
+
+    reqs = _shared_prefix_reqs()
+    rt = TwoProcessRuntime(_spec("P0", VENDOR_P, "prefill"),
+                           _spec("D0", VENDOR_D, "decode"),
+                           prefill_chunk=CHUNK)
+    rt.start()
+    try:
+        for r in reqs:
+            rt.serve([r], max_wall_s=120.0)
+    finally:
+        rt.shutdown()
+    assert {r.req_id: list(r.output_tokens) for r in reqs} == ref
+    # requests 2 and 3 share 40 leading tokens with request 1: at least
+    # those 2 × 40 tokens' chunks never crossed the wire …
+    assert rt.transfer_stats.prefix_hit_tokens >= 2 * 40
+    assert rt.transfer_stats.bytes_saved > 0
+    # … and the P process never recomputed them either
+    assert rt.worker_stats["P0"]["prefix_cached_tokens"] >= 2 * 40
+
+
+def test_cluster_2p2d_affinity_routes_same_prefix_to_same_d(params):
+    """Once a D advertises a prefix (heartbeat digest summary), a new
+    request sharing it must land there — even when plain load-ordering
+    would pick the other D."""
+    import time
+
+    from repro.serving.multiproc import ClusterRuntime, ClusterSpec
+    spec = ClusterSpec(
+        p=tuple(_spec(f"P{i}", VENDOR_P, "prefill") for i in range(2)),
+        d=tuple(_spec(f"D{i}", VENDOR_D, "decode") for i in range(2)))
+    rng = np.random.default_rng(21)
+    head_a = rng.integers(0, CFG.vocab_size, 40).astype(np.int32)
+    head_b = rng.integers(0, CFG.vocab_size, 40).astype(np.int32)
+    mk = lambda rid, head: Request(
+        req_id=rid,
+        prompt=np.concatenate(
+            [head, rng.integers(0, CFG.vocab_size, 4).astype(np.int32)]),
+        max_new_tokens=4)
+    rt = ClusterRuntime(spec, prefill_chunk=CHUNK)
+    rt.start()
+    try:
+        # rA → D0 (deterministic tiebreak), rB → D1 (load): each D now
+        # holds one distinct prefix
+        rt.serve([mk("rA", head_a), mk("rB", head_b)], max_wall_s=120.0)
+        assert dict(rt.stats.d_dispatches) == {"D0": 1, "D1": 1}
+        rB_d = "D1"                            # idle tiebreak sent rA to D0
+        # wait until rB's D advertises its prefix digests via heartbeat
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            rt.step(timeout=0.05)
+            inst = rt._instances.get(rB_d)
+            if inst is not None and inst.prefix_hashes:
+                break
+        assert rt._instances[rB_d].prefix_hashes
+        # a third request sharing rB's prefix must follow it to rB's D,
+        # although both Ds are idle and load-ordering would pick D0
+        rt.serve([mk("rA2", head_b)], max_wall_s=120.0)
+        assert rt.stats.d_dispatches[rB_d] == 2
+    finally:
+        rt.shutdown()
+    # the affinity hit was real: rA2's shared prefix skipped the wire
+    assert rt.transfer_stats.prefix_hit_tokens >= 40
+
+
+# --------------------------------------------------------------------- #
+# 6. P-side host store
+# --------------------------------------------------------------------- #
+def test_host_store_byte_lru_evicts_under_capacity():
+    entries = lambda: [("kv", 0, 0, {"k": np.ones((1, 8, 4), np.float32),
+                                     "v": np.ones((1, 8, 4), np.float32),
+                                     "start": 0})]
+    one_block = 2 * 8 * 4 * 4                  # k+v bytes per 8-token block
+    store = HostPrefixStore(block_size=8, capacity_bytes=2 * one_block)
+    p1 = np.arange(8, dtype=np.int32)
+    p2 = np.arange(8, 16, dtype=np.int32)
+    p3 = np.arange(16, 24, dtype=np.int32)
+    assert store.insert_prompt(p1, entries(), 8) == 1
+    assert store.insert_prompt(p2, entries(), 8) == 1
+    assert store.nbytes == 2 * one_block
+    store.match(p2, 8)                         # touch p2: p1 becomes LRU
+    assert store.insert_prompt(p3, entries(), 8) == 1
+    hit, _ = store.match(p1, 8)
+    assert hit == 0                            # p1 evicted
+    hit, _ = store.match(p2, 8)
+    assert hit == 8                            # p2 survived (recently used)
+
+
+# --------------------------------------------------------------------- #
+# 7. planner model honesty: assumed hit ratio must be a valid fraction
+# --------------------------------------------------------------------- #
+def test_framework_model_prefix_cache_hit_validated():
+    """``prefix_cache_hit`` is a fraction of prompt tokens served from
+    the cache; 1.0 would claim zero prefill compute (at least the final
+    token is always computed), so the valid range is [0, 1)."""
+    from repro.core.planner.simulator import FrameworkModel
+
+    assert FrameworkModel().prefix_cache_hit == 0.0
+    assert FrameworkModel(prefix_cache_hit=0.5).prefix_cache_hit == 0.5
+    for bad in (1.0, -0.1, 2.0):
+        with pytest.raises(ValueError, match="prefix_cache_hit"):
+            FrameworkModel(prefix_cache_hit=bad)
