@@ -1,0 +1,209 @@
+"""Zero-copy wire benchmark: fixed-layout segment codec vs legacy pickle.
+
+Two measurements, legacy (``codec="pickle"``) and zero-copy
+(``codec="fixed"``) side by side:
+
+  * **encode+stage bytes/s** — P-side cost of putting one prefill chunk
+    on the wire: ``encode_chunk`` + ``SharedMemoryConnector.stage`` into
+    a real shm segment. The legacy path pickles host copies of every
+    shard; the fixed path casts/quantizes through ``np.frombuffer``
+    views straight into the segment. Synthetic Llama-like chunk sizes so
+    the wire dominates, not model FLOPs.
+  * **re-page tokens/s** — D-side cost of landing delivered chunks in
+    the vendor pools, measured over a real streamed handoff (tiny model,
+    mismatched P/D block sizes so every chunk straddles block edges).
+    The legacy path decodes and RMW-scatters per entry; the fixed path
+    decodes each chunk's slab in one pass and scatters once per pool
+    with boundary-only overlay.
+
+Pool bit-parity between the two codecs is asserted, not assumed, and the
+streamed run also reports the measured wire/compute overlap fraction.
+Writes ``BENCH_wire.json`` at the repo root (CI uploads it).
+
+  PYTHONPATH=src python -m benchmarks.wire_bench [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+from types import SimpleNamespace
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.compat.precision import WireFormat
+from repro.core.disagg import DisaggPipeline
+from repro.core.transport import SharedMemoryConnector
+from repro.serving.engine import Engine, VendorProfile
+from repro.serving.request import Request
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_wire.json"
+
+VENDOR_P = VendorProfile("benchB", block_size=8, layout="nhbd",
+                         kv_dtype="float32", tp=2, hardware="gpu-b")
+VENDOR_D = VendorProfile("benchA", block_size=4, layout="nbhd",
+                         kv_dtype="float32", tp=1, hardware="gpu-a")
+
+# re-page model: tiny FLOPs, real chunked prefill + streamed re-page
+CFG = ModelConfig(name="wire-bench-tiny", family="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                  d_ff=128, vocab_size=512, param_dtype="float32",
+                  compute_dtype="float32")
+
+
+def _chunk_entries(layers: int, tokens: int, kv_heads: int, head_dim: int,
+                   seed: int = 0):
+    """Synthetic normalized prefill-chunk entries (Llama-like slab)."""
+    rng = np.random.default_rng(seed)
+    k = rng.normal(size=(layers, tokens, kv_heads, head_dim)) \
+        .astype(np.float32)
+    v = rng.normal(size=(layers, tokens, kv_heads, head_dim)) \
+        .astype(np.float32)
+    return {"kv": [("kv", 0, 0, {"k": k, "v": v, "start": 0})],
+            "length": tokens}
+
+
+def bench_encode_stage(codec: str, wire: WireFormat, iters: int,
+                       layers: int = 8, tokens: int = 256,
+                       kv_heads: int = 8, head_dim: int = 64) -> dict:
+    """P-side wall time of encode_chunk + stage into shm, per chunk."""
+    chunk = _chunk_entries(layers, tokens, kv_heads, head_dim)
+    payload_bytes = 2 * layers * tokens * kv_heads * head_dim * 4
+    p_stub = SimpleNamespace(vendor=SimpleNamespace(tp=VENDOR_P.tp))
+    conn = SharedMemoryConnector()
+    pipe = DisaggPipeline(conn, wire, codec=codec)
+    # warm once (shm segment pool, numpy temporaries)
+    wired = pipe.encode_chunk(p_stub, chunk)
+    meta = wired.meta() if hasattr(wired, "meta") else {"wire": wire}
+    conn.stage("warm", wired, meta)
+    conn.complete("warm")
+    t0 = time.perf_counter()
+    for i in range(iters):
+        wired = pipe.encode_chunk(p_stub, chunk)
+        meta = wired.meta() if hasattr(wired, "meta") else {"wire": wire}
+        conn.stage(f"c{i}", wired, meta)
+        conn.complete(f"c{i}")
+    dt = time.perf_counter() - t0
+    conn.close()
+    return {"codec": codec, "iters": iters,
+            "chunk_payload_bytes": payload_bytes,
+            "seconds_per_chunk": round(dt / iters, 6),
+            "encode_stage_bytes_per_s": round(payload_bytes * iters / dt)}
+
+
+def _engines(seed: int = 0):
+    import jax
+
+    from repro.models import model as M
+    params = M.init_params(jax.random.key(seed), CFG)
+    p = Engine("P0", CFG, params, VENDOR_P, num_blocks=128, max_batch=4,
+               max_seq_len=256, role="prefill")
+    d = Engine("D0", CFG, params, VENDOR_D, num_blocks=128, max_batch=4,
+               max_seq_len=256, role="decode")
+    return p, d
+
+
+def bench_repage(codec: str, wire: WireFormat, plen: int, chunk_tokens: int,
+                 repeats: int) -> dict:
+    """D-side re-page tokens/s over a real streamed handoff; the
+    materialize calls are timed in isolation (device-synchronized)."""
+    import jax
+
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, CFG.vocab_size, plen).astype(np.int32)
+    repage_s = [0.0]
+    pools = None
+    overlap = {}
+    for rep in range(repeats + 1):           # rep 0 = jit warm-up, untimed
+        p, d = _engines()
+        conn = SharedMemoryConnector()
+        pipe = DisaggPipeline(conn, wire, codec=codec)
+        orig = pipe.materialize
+
+        def timed(d_engine, *a, **kw):
+            t0 = time.perf_counter()
+            out = orig(d_engine, *a, **kw)
+            jax.block_until_ready(jax.tree.leaves(d_engine.caches))
+            if rep > 0:
+                repage_s[0] += time.perf_counter() - t0
+            return out
+
+        pipe.materialize = timed
+        req = Request(req_id=f"bench-{codec}-{rep}", prompt=prompt,
+                      max_new_tokens=1)
+        pipe.handoff_streamed(req, p, d, chunk_tokens=chunk_tokens,
+                              chunked_compute=True)
+        overlap = {
+            "wall_handoff_s": round(conn.stats.wall_handoff_seconds, 4),
+            "wall_overlap_s": round(conn.stats.wall_overlap_seconds, 4),
+            "overlap_pct": round(
+                100.0 * conn.stats.wall_overlap_seconds
+                / max(conn.stats.wall_handoff_seconds, 1e-12), 1),
+            "wire_bytes": conn.stats.bytes_moved,
+            "payload_bytes": conn.stats.payload_bytes,
+        }
+        conn.close()
+        pools = [np.asarray(x) for x in jax.tree.leaves(d.caches)]
+    tokens = plen * repeats
+    return {"codec": codec, "prompt_tokens": plen,
+            "chunk_tokens": chunk_tokens, "repeats": repeats,
+            "repage_seconds": round(repage_s[0], 4),
+            "repage_tokens_per_s": round(tokens / repage_s[0])
+            if repage_s[0] else None,
+            **overlap}, pools
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke sizing")
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+    enc_iters = 8 if args.fast else 32
+    plen, chunk, repeats = (96, 16, 2) if args.fast else (192, 16, 4)
+
+    wire = WireFormat("raw", "float32")
+    result = {"bench": "wire", "wire": "raw/float32",
+              "vendors": f"{VENDOR_P.layout}/bs{VENDOR_P.block_size}"
+                         f" -> {VENDOR_D.layout}/bs{VENDOR_D.block_size}",
+              "encode_stage": {}, "repage": {}}
+
+    for codec in ("pickle", "fixed"):
+        result["encode_stage"][codec] = bench_encode_stage(
+            codec, wire, enc_iters)
+    es = result["encode_stage"]
+    es["speedup"] = round(es["fixed"]["encode_stage_bytes_per_s"]
+                          / es["pickle"]["encode_stage_bytes_per_s"], 2)
+
+    pools = {}
+    for codec in ("pickle", "fixed"):
+        result["repage"][codec], pools[codec] = bench_repage(
+            codec, wire, plen, chunk, repeats)
+    rp = result["repage"]
+    rp["speedup"] = round(rp["fixed"]["repage_tokens_per_s"]
+                          / rp["pickle"]["repage_tokens_per_s"], 2)
+
+    # parity is asserted, not assumed: both codecs land identical pools
+    mismatch = sum(not np.array_equal(a, b)
+                   for a, b in zip(pools["pickle"], pools["fixed"]))
+    if mismatch:
+        raise RuntimeError(
+            f"codec parity violated: {mismatch} pool leaves differ")
+    result["pools_bit_identical"] = True
+
+    args.out.write_text(json.dumps(result, indent=2) + "\n")
+    print(json.dumps(result, indent=2))
+    print(f"\nwrote {args.out}")
+    print(f"encode+stage: fixed {es['fixed']['encode_stage_bytes_per_s']:,}"
+          f" B/s vs pickle {es['pickle']['encode_stage_bytes_per_s']:,} B/s"
+          f"  ({es['speedup']}x)")
+    print(f"re-page:      fixed {rp['fixed']['repage_tokens_per_s']:,}"
+          f" tok/s vs pickle {rp['pickle']['repage_tokens_per_s']:,} tok/s"
+          f"  ({rp['speedup']}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -91,7 +91,8 @@ def run_single(args, faults: bool):
           f"{caps.fixed_latency_s*1e6:g} µs/read, "
           f"max {caps.max_inflight} in flight, "
           f"{'cross-process' if caps.cross_process else 'in-process'})")
-    pipeline = DisaggPipeline(connector, WireFormat("raw", "float32"))
+    pipeline = DisaggPipeline(connector, WireFormat("raw", "float32"),
+                              codec=args.codec)
     # chunked streaming: each prefill chunk's KV hits the wire while the
     # next chunk computes, and decode steps interleave with long prefills
     sched = GlobalScheduler(pipeline, prefill_chunk=args.prefill_chunk)
@@ -199,6 +200,7 @@ def run_cluster(args):
     t0 = time.perf_counter()
     tokens, rt = serve_cluster(cluster, reqs,
                                prefill_chunk=args.prefill_chunk,
+                               codec=args.codec,
                                max_wall_s=600.0)
     wall = time.perf_counter() - t0
     total_tokens = sum(len(t) for t in tokens.values())
@@ -217,6 +219,10 @@ def _print_wire(ts) -> None:
     print(f"KV wire: {ts.transfers} transfers ({ts.chunks} streamed chunks), "
           f"{ts.bytes_moved/1e6:.1f} MB, "
           f"peak pinned buffer {ts.peak_buffer_bytes/1e6:.1f} MB")
+    if ts.payload_bytes:
+        print(f"wire/payload: {ts.bytes_moved/1e6:.2f}/"
+              f"{ts.payload_bytes/1e6:.2f} MB "
+              f"(compression ratio {ts.wire_compression:.2f})")
     if ts.chunks and ts.overlap_modeled_seconds:
         print(f"overlap (modeled): {ts.overlap_modeled_seconds*1e6:.1f} µs of "
               f"{ts.modeled_seconds*1e6:.1f} µs wire time hidden under "
@@ -263,6 +269,10 @@ def main():
                     help="KV-transport backend: in-process (zero-copy), "
                          "shared-memory (real cross-process staging), or "
                          "modeled-RDMA (async multi-tick completion)")
+    ap.add_argument("--codec", default="fixed",
+                    choices=["fixed", "pickle"],
+                    help="chunk wire codec: zero-copy fixed-layout "
+                         "segments or the legacy pickled blob")
     ap.add_argument("--num-p", type=int, default=None,
                     help="prefill worker processes (multi-process runtime; "
                          "overrides --plan)")

@@ -12,6 +12,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +50,38 @@ def decode_wire(payload: jax.Array, scales: Optional[jax.Array],
     if wire.kind == "int8":
         return (payload.astype(jnp.float32) * scales).astype(target_dtype)
     raise ValueError(f"unknown wire kind {wire.kind!r}")
+
+
+def encode_wire_into(src: np.ndarray, wire: WireFormat, out: np.ndarray,
+                     scales_out: Optional[np.ndarray] = None) -> None:
+    """Host-side single-pass encode of canonical KV directly into a
+    destination buffer view (the zero-copy wire's write path).
+
+    ``out`` is a view over the wire segment with the wire dtype; for the
+    int8 wire ``scales_out`` is the fp32 scale view with a trailing axis of
+    1. Bit-identical to :func:`encode_wire` (same absmax/round/clip math in
+    float32, IEEE-deterministic), asserted by the wire conformance tests.
+    """
+    if wire.kind == "raw":
+        np.copyto(out, src, casting="unsafe")
+        return
+    if wire.kind == "int8":
+        x = np.asarray(src, dtype=np.float32)
+        absmax = np.max(np.abs(x), axis=-1, keepdims=True)
+        scale = (np.maximum(absmax, np.float32(1e-8))
+                 / np.float32(127.0)).astype(np.float32)
+        np.copyto(scales_out, scale.reshape(scales_out.shape))
+        np.copyto(out, np.clip(np.round(x / scale), -127, 127),
+                  casting="unsafe")
+        return
+    raise ValueError(f"unknown wire kind {wire.kind!r}")
+
+
+def wire_payload_dtype(wire: WireFormat) -> np.dtype:
+    """numpy dtype of the wire payload slab."""
+    if wire.kind == "int8":
+        return np.dtype(np.int8)
+    return jnp.dtype(wire.dtype)
 
 
 def wire_bytes(kv_canon_shape: Tuple[int, ...], wire: WireFormat) -> int:

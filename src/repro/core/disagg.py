@@ -35,6 +35,7 @@ what the paper's Figs. 9–10 compare against.
 from __future__ import annotations
 
 import collections
+import functools
 import time
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
@@ -44,7 +45,8 @@ import numpy as np
 
 from repro.core.compat import parallel_align, precision
 from repro.core.compat.precision import WireFormat
-from repro.core.transport import KVConnector, TransferHandle
+from repro.core.transport import KVConnector, TransferHandle, WireChunk
+from repro.kernels import ops as kops
 from repro.serving import paged_cache as PC
 from repro.serving.engine import (Engine, kv_entries_with_start,
                                   slice_kv_entries)
@@ -57,11 +59,97 @@ def _to_device(payload):
         lambda x: jnp.asarray(x) if isinstance(x, np.ndarray) else x, payload)
 
 
+def _repage_pool_body(spec: PC.KVPageSpec, pool: jax.Array, block_ids,
+                      canon: jax.Array, *, start: int, rmw: bool,
+                      kernel: bool) -> jax.Array:
+    """Single-pass re-page of canon (count, S, kv, hd) at absolute
+    positions [start, start+S), vmapped over the layer count.
+
+    Unlike the legacy rmw path — which reads back *every* touched page
+    and splices — the overlay scatter only reads the first/last partial
+    page (jnp path) or merges partial rows inside the Pallas kernel
+    (``kernel=True``), so interior pages move exactly once."""
+    bs = spec.block_size
+    lo_block = start // bs
+    front = start - lo_block * bs
+    s = canon.shape[1]
+    s_tot = front + s
+    nb = -(-s_tot // bs)
+    use = block_ids[lo_block:lo_block + nb]
+    if not rmw:
+        if front:
+            canon = jnp.pad(canon, ((0, 0), (front, 0), (0, 0), (0, 0)))
+        return jax.vmap(lambda pl, cn: PC.scatter_sequence(spec, pl, use, cn)
+                        )(pool, canon)
+    if kernel:
+        cp = jnp.pad(canon, ((0, 0), (front, nb * bs - s_tot),
+                             (0, 0), (0, 0)))
+        cp = cp.reshape(canon.shape[0], nb, bs, spec.kv_heads, spec.head_dim)
+        return jax.vmap(lambda pl, cn: kops.scatter_pages_overlay(
+            spec, pl, use, cn, front=front, seq_len=s))(pool, cp)
+    return jax.vmap(lambda pl, cn: PC.scatter_sequence_overlay(
+        spec, pl, use, cn, front))(pool, canon)
+
+
+_repage_pool = jax.jit(_repage_pool_body,
+                       static_argnames=("spec", "start", "rmw", "kernel"))
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "wire", "tp_p", "tp_d",
+                                             "count", "start", "rmw",
+                                             "kernel"))
+def _repage_kv_entry(spec: PC.KVPageSpec, k_pool: jax.Array,
+                     v_pool: jax.Array, block_ids, pay, sc, *,
+                     wire: WireFormat, tp_p: int, tp_d: int, count: int,
+                     start: int, rmw: bool, kernel: bool):
+    """One compiled program per chunk shape: dequantize the whole
+    shard-major slab (2·tp_p, count, S, kvs, hd) in one pass, realign TP
+    shards, overlay-scatter both pools."""
+    sc_j = None if sc is None else sc.reshape(pay.shape[:-1] + (1,))
+    dec = precision.decode_wire(pay, sc_j, wire, spec.jdtype)
+    s = pay.shape[2]
+    dec = dec.reshape(2 * tp_p, count * s, -1, spec.head_dim)
+    k_d = jnp.concatenate(
+        parallel_align.realign_shards(list(dec[:tp_p]), tp_d),
+        axis=1).reshape(count, s, -1, spec.head_dim)
+    v_d = jnp.concatenate(
+        parallel_align.realign_shards(list(dec[tp_p:]), tp_d),
+        axis=1).reshape(count, s, -1, spec.head_dim)
+    return (_repage_pool_body(spec, k_pool, block_ids, k_d, start=start,
+                              rmw=rmw, kernel=kernel),
+            _repage_pool_body(spec, v_pool, block_ids, v_d, start=start,
+                              rmw=rmw, kernel=kernel))
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "wire", "count",
+                                             "start", "rmw", "kernel"))
+def _repage_mla_part(spec: PC.KVPageSpec, pool: jax.Array, block_ids,
+                     pay, sc, *, wire: WireFormat, count: int, start: int,
+                     rmw: bool, kernel: bool) -> jax.Array:
+    sc_j = None if sc is None else sc.reshape(pay.shape[0], 1, 1)
+    d = precision.decode_wire(pay, sc_j, wire, spec.jdtype)
+    d = d.reshape(count, -1, 1, spec.head_dim)
+    return _repage_pool_body(spec, pool, block_ids, d, start=start,
+                             rmw=rmw, kernel=kernel)
+
+
+# chunk wire codecs: "fixed" stages zero-copy WireChunks (fixed binary
+# layout, single-pass vectorized re-page); "pickle" is the legacy pytree
+# blob (kept as the parity/compat baseline)
+CODECS = ("fixed", "pickle")
+
+
 class DisaggPipeline:
     def __init__(self, transfer: KVConnector,
-                 wire: Optional[WireFormat] = None):
+                 wire: Optional[WireFormat] = None,
+                 codec: str = "fixed", repage_kernel: bool = False):
+        assert codec in CODECS, codec
         self.transfer = transfer
         self.wire = wire or WireFormat(kind="raw", dtype="bfloat16")
+        self.codec = codec
+        # route the chunk re-page scatter through the Pallas overlay kernel
+        # (partial blocks merge inside the kernel) instead of the jnp path
+        self.repage_kernel = repage_kernel
 
     # ------------------------------------------------------------------ #
     # P side: package → wire
@@ -111,10 +199,17 @@ class DisaggPipeline:
                 "wire": self.wire}
         return wire_pkg, meta
 
-    def encode_chunk(self, p_engine: Engine, chunk: Dict[str, Any]
-                     ) -> Dict[str, Any]:
-        """One prefill chunk ({"kv": normalized entries}) → wire chunk."""
+    def encode_chunk(self, p_engine: Engine, chunk: Dict[str, Any]):
+        """One prefill chunk ({"kv": normalized entries}) → wire chunk.
+
+        Fixed codec: returns a *planned* :class:`WireChunk` — no KV bytes
+        move here; the connector executes the slab plan straight into its
+        segment (``write_into``), so the encode is a dtype cast / quantize
+        through buffer views with no pickle and no intermediate blob."""
         tp_p = p_engine.vendor.tp
+        if self.codec == "fixed":
+            return WireChunk.from_entries(chunk["kv"], self.wire, tp_p,
+                                          seq_len=chunk.get("length", 0))
         return {"kv": [self._encode_entry(tp_p, kind, gi, pi, ent)
                        for kind, gi, pi, ent in chunk["kv"]]}
 
@@ -128,6 +223,10 @@ class DisaggPipeline:
         instance's pools. ``rmw`` preserves the untouched rows of partially
         covered blocks — required when streaming chunks whose boundaries do
         not align with the D vendor's block size."""
+        if isinstance(payload, WireChunk):
+            self._materialize_wire(d_engine, slot, block_ids, payload,
+                                   rmw=rmw)
+            return
         tp_d = d_engine.vendor.tp
         wire: WireFormat = meta["wire"]
         caches = [list(g) for g in d_engine.caches]
@@ -194,6 +293,67 @@ class DisaggPipeline:
             caches[gi][pi] = c
 
         d_engine.caches = tuple(tuple(g) for g in caches)
+
+    def _materialize_wire(self, d_engine: Engine, slot: int,
+                          block_ids: np.ndarray, chunk: WireChunk, *,
+                          rmw: bool = False) -> None:
+        """Fixed-codec fast path: one vectorized decode + one scatter per
+        pool, per chunk entry.
+
+        The chunk's kv slab is already shard-major (2·tp_p, count, S, kvs,
+        hd) — all shards of all layers in one contiguous view — so a single
+        ``decode_wire`` dequantizes the whole entry (vs per-shard decode
+        loops), and the re-page is one ``scatter_sequence_overlay`` per
+        pool with boundary-only read-modify-write (vs readback of every
+        touched page). Bit-identical to the legacy per-entry path."""
+        tp_d = d_engine.vendor.tp
+        wire = chunk.wire
+        caches = [list(g) for g in d_engine.caches]
+        bids = jnp.asarray(block_ids, jnp.int32)
+        kernel = self.repage_kernel
+
+        for entry in chunk.entries():
+            gi, pi = entry["gi"], entry["pi"]
+            count, s, start = entry["count"], entry["seq"], entry["start"]
+            if entry["kind"] == "mla":
+                pools = caches[gi][pi]
+                new = {}
+                for pay, sc, name in zip(entry["payloads"], entry["scales"],
+                                         ("ckv", "kpe")):
+                    spec_m = d_engine.specs[name]
+                    new[name + "_pool"] = _repage_mla_part(
+                        spec_m, pools[name + "_pool"], bids,
+                        jnp.array(pay),   # copy: don't alias the segment
+                        None if sc is None else jnp.array(sc),
+                        wire=wire, count=count, start=start, rmw=rmw,
+                        kernel=kernel)
+                caches[gi][pi] = dict(pools, **new)
+                continue
+            spec = d_engine.specs["kv"]
+            tp_p = entry["tp_p"]
+            pay = entry["payload"]           # (2·tp_p, count, S, kvs, hd)
+            sc = entry["scales"]
+            pools = caches[gi][pi]
+            k_pool, v_pool = _repage_kv_entry(
+                spec, pools["k_pool"], pools["v_pool"], bids,
+                jnp.array(pay),      # copy: don't alias the shm segment
+                None if sc is None else jnp.array(sc),
+                wire=wire, tp_p=tp_p, tp_d=tp_d, count=count, start=start,
+                rmw=rmw, kernel=kernel)
+            caches[gi][pi] = dict(pools, k_pool=k_pool, v_pool=v_pool)
+
+        d_engine.caches = tuple(tuple(g) for g in caches)
+
+    @staticmethod
+    def _write_pages_vec(spec: PC.KVPageSpec, pool: jax.Array, block_ids,
+                         canon: jax.Array, start: int, *, rmw: bool = False,
+                         kernel: bool = False) -> jax.Array:
+        """Jit-compiled single-pass re-page (see
+        :func:`_repage_pool_body`); one compiled program per
+        (spec, chunk shape, start offset)."""
+        return _repage_pool(spec, pool, jnp.asarray(block_ids, jnp.int32),
+                            jnp.asarray(canon), start=start, rmw=rmw,
+                            kernel=kernel)
 
     @staticmethod
     def _write_pages(spec: PC.KVPageSpec, pool: jax.Array, block_ids,
@@ -418,6 +578,9 @@ class StreamedHandoff:
         payload, meta = handle.wait()
         self.pipeline.materialize(self.d_engine, self.slot, self.block_ids,
                                   _to_device(payload), meta, rmw=True)
+        if hasattr(payload, "release"):
+            payload.release()      # drop zero-copy views before the segment
+            #                        backing this chunk is closed
         tr.complete(key)
         tr.stats.chunks += 1
         self._chunk_modeled.append(tr.modeled_latency(handle.nbytes))

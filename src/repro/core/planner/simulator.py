@@ -263,14 +263,26 @@ def p2p_time(nbytes: float, hw: HardwareSpec) -> float:
     return nbytes / hw.eff_link + 2e-6
 
 
-def connector_wire_time(nbytes: float, caps) -> float:
+def connector_wire_time(nbytes: float, caps, *, concurrent: int = 1) -> float:
     """P→D wire entry of the communication operator library, sourced from a
     KV connector's ``capabilities()`` (fixed latency + bytes/bandwidth)
     instead of a hard-coded bandwidth constant. ``caps`` is any object with
-    the :class:`repro.core.transport.ConnectorCapabilities` shape."""
+    the :class:`repro.core.transport.ConnectorCapabilities` shape.
+
+    The connector-declared fixed per-chunk codec overhead
+    (``header_bytes``) rides on the payload. ``concurrent`` models the
+    declared link arbitration for simultaneous flights: a fair-share link
+    divides bandwidth (each flight sees ``bw / n``, one setup latency); an
+    exclusive link serializes (the last read waits out the others)."""
     if nbytes <= 0:
         return 0.0
-    return caps.fixed_latency_s + nbytes / (caps.bandwidth_gbps * 1e9)
+    wire_bytes = nbytes + getattr(caps, "header_bytes", 0)
+    xfer = wire_bytes / (caps.bandwidth_gbps * 1e9)
+    if concurrent > 1:
+        if getattr(caps, "link_sharing", "exclusive") == "fair":
+            return caps.fixed_latency_s + concurrent * xfer
+        return concurrent * (caps.fixed_latency_s + xfer)
+    return caps.fixed_latency_s + xfer
 
 
 def connector_chunk_tokens(caps, per_token_wire_bytes: float,

@@ -24,6 +24,7 @@ from repro.core.transport.base import (ConnectorCapabilities,  # noqa: F401
 from repro.core.transport.inprocess import InProcessConnector  # noqa: F401
 from repro.core.transport.modeled_rdma import ModeledRDMAConnector  # noqa: F401
 from repro.core.transport.shared_memory import SharedMemoryConnector  # noqa: F401
+from repro.core.transport.wirefmt import WireChunk  # noqa: F401
 
 CONNECTORS: Dict[str, Type[KVConnector]] = {
     InProcessConnector.transport: InProcessConnector,
@@ -56,5 +57,5 @@ __all__ = [
     "ConnectorCapabilities", "KVConnector", "PinnedBufferPool",
     "TransferError", "TransferHandle", "TransferStats", "tree_bytes",
     "InProcessConnector", "SharedMemoryConnector", "ModeledRDMAConnector",
-    "CONNECTORS", "register_connector", "make_connector",
+    "WireChunk", "CONNECTORS", "register_connector", "make_connector",
 ]

@@ -48,7 +48,11 @@ class TransferError(RuntimeError):
 @dataclasses.dataclass
 class TransferStats:
     transfers: int = 0
-    bytes_moved: int = 0
+    bytes_moved: int = 0            # wire bytes (what actually crossed)
+    payload_bytes: int = 0          # raw canonical KV bytes those carried —
+    #                                 bytes_moved/payload_bytes < 1 means the
+    #                                 wire compressed (int8), > 1 means
+    #                                 format overhead (headers) dominated
     chunks: int = 0                 # streamed KV chunks (overlapped handoff)
     stage_seconds: float = 0.0      # wall time spent staging (P side)
     read_seconds: float = 0.0       # wall time spent reading (D side)
@@ -69,19 +73,37 @@ class TransferStats:
     # (estimated from the flight's measured bytes/token)
     prefix_hit_tokens: int = 0
     bytes_saved: int = 0
+    # link congestion: modeled extra wire time concurrent flights cost each
+    # other on a shared link (fair-share arbitration), plus the measured
+    # attribution — read wall time delivered while other reads were still
+    # in flight, and the peak number of simultaneous in-flight reads
+    congested_seconds: float = 0.0
+    contended_read_seconds: float = 0.0
+    concurrent_reads_peak: int = 0
+
+    # fields merged by max() instead of summed (high-water marks)
+    _PEAK_FIELDS = ("peak_buffer_bytes", "concurrent_reads_peak")
 
     @property
     def exposed_modeled_seconds(self) -> float:
         """Modeled wire time left on the critical path after overlap."""
         return self.modeled_seconds - self.overlap_modeled_seconds
 
+    @property
+    def wire_compression(self) -> float:
+        """Measured wire/payload byte ratio (< 1: compressed; > 1:
+        format overhead). 1.0 until anything moved."""
+        if not self.payload_bytes:
+            return 1.0
+        return self.bytes_moved / self.payload_bytes
+
     def merge(self, other: "TransferStats") -> None:
         """Fold another connector's counters into this one (the two-process
         runtime aggregates the P-side and D-side connectors' stats)."""
         for f in dataclasses.fields(self):
-            if f.name == "peak_buffer_bytes":
-                self.peak_buffer_bytes = max(self.peak_buffer_bytes,
-                                             other.peak_buffer_bytes)
+            if f.name in self._PEAK_FIELDS:
+                setattr(self, f.name, max(getattr(self, f.name),
+                                          getattr(other, f.name)))
             else:
                 setattr(self, f.name,
                         getattr(self, f.name) + getattr(other, f.name))
@@ -125,6 +147,14 @@ class ConnectorCapabilities:
     chunk_bytes: int = 0            # preferred wire granularity (0 = any)
     cross_process: bool = False     # payloads survive a process boundary
     zero_copy: bool = True          # reads return the staged buffers
+    # how concurrent in-flight reads share the link: "exclusive" reads
+    # serialize (one at a time at full bandwidth); "fair" reads progress
+    # simultaneously at bandwidth/n (processor-sharing arbitration)
+    link_sharing: str = "exclusive"
+    # wire encoding of staged KV chunks ("fixed" = zero-copy fixed-layout
+    # segments, "pickle" = legacy blob) and its fixed per-chunk overhead
+    wire_codec: str = "pickle"
+    header_bytes: int = 0
 
     @property
     def bandwidth_bytes_s(self) -> float:
@@ -164,7 +194,7 @@ class TransferHandle:
         """Non-blocking: has the wire delivered this read?"""
         if self._settled:
             return True
-        return self.connector._now >= self.ready_at
+        return self.connector._handle_ready(self)
 
     def wait(self) -> Tuple[Any, Dict[str, Any]]:
         """Complete the read (fast-forwarding modeled wire time if it is
@@ -175,7 +205,8 @@ class TransferHandle:
             raise TransferError(
                 f"transfer {self.key!r} already failed")
         t0 = time.perf_counter()
-        self.connector._advance_to(self.ready_at)
+        contended = self.connector._inflight > 1   # others also in flight
+        self.connector._advance_for(self)
         try:
             payload, meta = self.connector._fetch(self.key)
         except KeyError:
@@ -190,8 +221,14 @@ class TransferHandle:
         stats = self.connector.stats
         stats.transfers += 1
         stats.bytes_moved += self.nbytes
+        stats.payload_bytes += self.connector._payload_sizes.get(
+            self.key, self.nbytes)
         stats.modeled_seconds += self.connector.modeled_latency(self.nbytes)
-        stats.read_seconds += time.perf_counter() - t0
+        elapsed = time.perf_counter() - t0
+        stats.read_seconds += elapsed
+        if contended:                  # measured attribution: this read's
+            #                            wall time ran under link concurrency
+            stats.contended_read_seconds += elapsed
         return self._result
 
     def cancel(self) -> None:
@@ -203,6 +240,7 @@ class TransferHandle:
         if not self._settled:
             self._settled = True
             self.connector._inflight = max(self.connector._inflight - 1, 0)
+            self.connector._on_settle(self)
 
 
 class KVConnector:
@@ -228,6 +266,7 @@ class KVConnector:
         self.stats = TransferStats()
         self._peers: Dict[str, Dict[str, Any]] = {}
         self._sizes: Dict[str, int] = {}
+        self._payload_sizes: Dict[str, int] = {}   # raw bytes behind each key
         self._now = 0.0                # connector-internal (modeled) clock
         self._inflight = 0
 
@@ -255,10 +294,16 @@ class KVConnector:
         if key in self._sizes:
             raise ValueError(f"transfer key {key!r} already staged")
         t0 = time.perf_counter()
-        payload = jax.tree.map(
-            lambda x: np.asarray(x) if hasattr(x, "shape") else x, payload)
+        if hasattr(payload, "write_into"):     # WireChunk: already planned
+            payload_bytes = payload.payload_nbytes
+        else:
+            payload = jax.tree.map(
+                lambda x: np.asarray(x) if hasattr(x, "shape") else x,
+                payload)
+            payload_bytes = tree_bytes(payload)
         nbytes = self._put(key, payload, meta or {})
         self._sizes[key] = nbytes
+        self._payload_sizes[key] = payload_bytes
         self.stats.stage_seconds += time.perf_counter() - t0
         self.stats.peak_buffer_bytes = self.pool.high_water
         return nbytes
@@ -275,7 +320,11 @@ class KVConnector:
                 f"(max_inflight={self.max_inflight})")
         nbytes = self._sizes[key]
         self._inflight += 1
-        return TransferHandle(self, key, nbytes, self._ready_time(nbytes))
+        self.stats.concurrent_reads_peak = max(
+            self.stats.concurrent_reads_peak, self._inflight)
+        handle = TransferHandle(self, key, nbytes, self._ready_time(nbytes))
+        self._on_issue(handle)
+        return handle
 
     def read(self, key: str):
         """Synchronous convenience: issue + wait in one call (the legacy
@@ -285,6 +334,7 @@ class KVConnector:
     def complete(self, key: str) -> None:
         """D finished materializing — free the staging buffer."""
         nbytes = self._sizes.pop(key, None)
+        self._payload_sizes.pop(key, None)
         if nbytes is None:
             return                     # idempotent: already completed/dropped
         self._evict(key)
@@ -316,6 +366,21 @@ class KVConnector:
 
     def _advance_to(self, t: float) -> None:
         self._now = max(self._now, t)
+
+    # -- handle hooks (overridden by link-sharing backends) ---------------- #
+    def _handle_ready(self, handle: "TransferHandle") -> bool:
+        """Has the wire delivered ``handle``? Default: static ready time."""
+        return self._now >= handle.ready_at
+
+    def _advance_for(self, handle: "TransferHandle") -> None:
+        """Fast-forward the modeled clock until ``handle`` completes."""
+        self._advance_to(handle.ready_at)
+
+    def _on_issue(self, handle: "TransferHandle") -> None:
+        """A read was just issued (link-sharing backends register flows)."""
+
+    def _on_settle(self, handle: "TransferHandle") -> None:
+        """A handle settled (delivered or cancelled) — release link state."""
 
     # -- storage hooks (backend-specific) --------------------------------- #
     def _put(self, key: str, payload, meta: Dict[str, Any]) -> int:

@@ -9,6 +9,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, Tuple
 
+from repro.core.transport import wirefmt
 from repro.core.transport.base import KVConnector, tree_bytes
 
 
@@ -25,7 +26,9 @@ class InProcessConnector(KVConnector):
 
     def capabilities(self):
         return dataclasses.replace(super().capabilities(),
-                                   cross_process=False, zero_copy=True)
+                                   cross_process=False, zero_copy=True,
+                                   wire_codec="fixed",
+                                   header_bytes=wirefmt.nominal_header_bytes())
 
     # -- storage hooks ---------------------------------------------------- #
     def _put(self, key: str, payload, meta: Dict[str, Any]) -> int:

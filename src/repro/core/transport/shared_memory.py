@@ -1,12 +1,19 @@
 """Shared-memory connector: real cross-process staging.
 
-Each staged wire entry is serialized (pickle of the numpy pytree + meta)
-into a ``multiprocessing.shared_memory`` segment, so a D instance running
-in *another process* can attach the segment by name and deserialize — the
-same stage/attach/read shape a real RDMA or NVLink-peer wire has, minus
-the NIC. The pinned pool accounts the serialized footprint (what actually
-sits in the shared segment), and reads return fresh deserialized arrays
-(no aliasing with the P side, as across a real process boundary).
+KV chunks (:class:`~repro.core.transport.wirefmt.WireChunk`) are staged
+*zero-copy*: the chunk's fixed-layout plan is executed straight into a
+``multiprocessing.shared_memory`` segment (dtype cast / quantize through
+``np.frombuffer`` views — no ``pickle.dumps``, no intermediate blob), and
+a reader gets a bound ``WireChunk`` whose entry arrays are views over the
+segment itself. Non-chunk payloads (tail states/cross, legacy codec,
+arbitrary pytrees) keep the pickled wire: serialize into the segment,
+deserialize on read. The two are distinguished by the segment's leading
+magic bytes. The pinned pool accounts the segment footprint either way.
+
+Two-process protocol: same as before — only the bytes inside the segment
+changed shape. A zero-copy reader must drop its views (the D re-page path
+releases the bound chunk) before ``complete(key)``; ``_evict`` tolerates
+stragglers by deferring the close until the buffer is unpinned.
 
 Two-process protocol (the multiproc serving runtime): the P side stages
 and ships ``export_descriptor(key)`` over the control plane; the D side
@@ -32,6 +39,7 @@ import weakref
 from multiprocessing import shared_memory
 from typing import Any, Dict, Set, Tuple
 
+from repro.core.transport import wirefmt
 from repro.core.transport.base import KVConnector
 
 
@@ -41,11 +49,14 @@ def _cleanup_segments(segments: Dict[str, shared_memory.SharedMemory],
     segment, unlink the ones this process created."""
     for key, seg in list(segments.items()):
         try:
-            seg.close()
             if key not in adopted:
                 seg.unlink()
         except Exception:
             pass
+        try:
+            seg.close()
+        except Exception:
+            pass                      # BufferError: a view still pins it
     segments.clear()
     adopted.clear()
 
@@ -61,6 +72,9 @@ class SharedMemoryConnector(KVConnector):
                          fixed_latency_s=0.0, max_inflight=max_inflight)
         self._segments: Dict[str, shared_memory.SharedMemory] = {}
         self._adopted: Set[str] = set()
+        # segments whose close() hit BufferError (a reader's view was still
+        # alive) — retried on later evictions and at close()
+        self._deferred_close: list = []
         # leak guard: runs at GC *and* interpreter exit, whichever first —
         # a process dying without drop()/close() must not strand OS segments
         self._finalizer = weakref.finalize(
@@ -68,7 +82,9 @@ class SharedMemoryConnector(KVConnector):
 
     def capabilities(self):
         return dataclasses.replace(super().capabilities(),
-                                   cross_process=True, zero_copy=False)
+                                   cross_process=True, zero_copy=True,
+                                   wire_codec="fixed",
+                                   header_bytes=wirefmt.nominal_header_bytes())
 
     def segment_name(self, key: str) -> str:
         """OS-level name of a staged key's segment — what a reader in
@@ -107,42 +123,69 @@ class SharedMemoryConnector(KVConnector):
 
     # -- storage hooks ---------------------------------------------------- #
     def _put(self, key: str, payload, meta: Dict[str, Any]) -> int:
+        if hasattr(payload, "write_into"):     # WireChunk: zero-copy stage
+            nbytes = payload.nbytes
+            seg = self._new_segment(nbytes)
+            payload.write_into(seg.buf)        # cast/quantize into the shm
+            self._segments[key] = seg
+            return nbytes
         blob = pickle.dumps((payload, meta), protocol=pickle.HIGHEST_PROTOCOL)
         nbytes = len(blob)
-        self.pool.acquire(nbytes)
-        try:
-            seg = shared_memory.SharedMemory(create=True, size=nbytes)
-        except Exception:
-            self.pool.release(nbytes)
-            raise
+        seg = self._new_segment(nbytes)
         seg.buf[:nbytes] = blob
         self._segments[key] = seg
         return nbytes
 
-    def _get(self, key: str) -> Tuple[Any, Dict[str, Any]]:
-        seg = self._segments[key]
-        # attach-by-name round trip: deserialize from the OS segment, not
-        # from any in-process reference to the staged objects
-        reader = shared_memory.SharedMemory(name=seg.name)
+    def _new_segment(self, nbytes: int) -> shared_memory.SharedMemory:
+        self.pool.acquire(nbytes)
         try:
-            payload, meta = pickle.loads(bytes(reader.buf[:self._sizes[key]]))
-        finally:
-            reader.close()
+            return shared_memory.SharedMemory(create=True, size=nbytes)
+        except Exception:
+            self.pool.release(nbytes)
+            raise
+
+    def _get(self, key: str) -> Tuple[Any, Dict[str, Any]]:
+        # reuse the mapping this connector already holds — staging (P side)
+        # and adoption (D side) both attached the segment once; re-attaching
+        # by name per read cost an open/mmap/close round trip per chunk
+        seg = self._segments[key]
+        nbytes = self._sizes[key]
+        if nbytes >= len(wirefmt.MAGIC) \
+                and bytes(seg.buf[:len(wirefmt.MAGIC)]) == wirefmt.MAGIC:
+            chunk = wirefmt.WireChunk.from_buffer(seg.buf)
+            return chunk, chunk.meta()         # zero-copy views over the shm
+        payload, meta = pickle.loads(bytes(seg.buf[:nbytes]))
         return payload, meta
 
     def _evict(self, key: str) -> None:
         seg = self._segments.pop(key, None)
         if seg is None:
             return
-        seg.close()
-        if key in self._adopted:               # reader side: creator unlinks
-            self._adopted.discard(key)
-            return
+        adopted = key in self._adopted
+        self._adopted.discard(key)
+        if not adopted:                        # creator owns the OS name
+            try:
+                seg.unlink()
+            except FileNotFoundError:
+                pass
         try:
-            seg.unlink()
-        except FileNotFoundError:
-            pass
+            seg.close()
+        except BufferError:
+            # a zero-copy view over this segment is still alive somewhere —
+            # defer the munmap; retried on later evictions / close()
+            self._deferred_close.append(seg)
+        self._retry_deferred()
+
+    def _retry_deferred(self) -> None:
+        still = []
+        for seg in self._deferred_close:
+            try:
+                seg.close()
+            except BufferError:
+                still.append(seg)
+        self._deferred_close = still
 
     def close(self) -> None:
         super().close()
+        self._retry_deferred()
         self._finalizer()          # idempotent: nothing left, detach atexit

@@ -1,0 +1,371 @@
+"""Fixed-layout zero-copy KV wire format.
+
+The legacy shared-memory wire pickled a pytree of per-shard numpy arrays
+into each segment: one serialize copy on P, one deserialize copy on D, and
+a Python-object header whose size scales with entry count. This module
+replaces it with a *fixed binary layout* so the segment itself is the wire
+representation:
+
+    ┌───────────────────────────────────────────────────────────────┐
+    │ prelude  magic · version · wire kind/dtype · tp_p · n_entries │
+    │          · seq_len · payload_bytes · total_bytes              │
+    ├───────────────────────────────────────────────────────────────┤
+    │ entry records  kind · gi · pi · start · count · seq · parts   │
+    │   part records  dtype · shape · payload_off · scales_off      │
+    ├───────────────────────────────────────────────────────────────┤
+    │ slab 0  contiguous KV payload (64-byte aligned)               │
+    │ slab 0' fp32 scales (int8 wire only)                          │
+    │ slab 1  …                                                     │
+    └───────────────────────────────────────────────────────────────┘
+
+A :class:`WireChunk` has two states sharing one decode path:
+
+  * *planned* (P side): built from normalized chunk entries; knows its
+    exact byte layout up front, so ``write_into(buf)`` casts/quantizes the
+    source arrays straight into the destination buffer through
+    ``np.frombuffer`` views — no ``pickle.dumps``, no intermediate blob.
+  * *bound* (D side): ``from_buffer`` parses the header of an adopted
+    segment and ``entries()`` yields zero-copy numpy views over its slabs.
+
+A planned chunk read in-process (inproc/rdma backends) lazily serializes
+to a local buffer and decodes through the same bound path, so the bits a
+reader sees are identical across every backend. ``release()`` drops all
+buffer references so the shared-memory segment can close without
+``BufferError`` (numpy views pin the exported buffer).
+"""
+from __future__ import annotations
+
+import struct
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.compat import precision
+from repro.core.compat.precision import WireFormat
+
+MAGIC = b"RKVWIRE1"
+VERSION = 1
+_ALIGN = 64
+_NO_SCALES = 0xFFFFFFFFFFFFFFFF
+
+# magic(8) version(H) wire_kind(B) wire_dtype(B) tp_p(H) n_entries(H)
+# seq_len(I) payload_bytes(Q) total_bytes(Q)
+_PRELUDE = struct.Struct("<8sHBBHHIQQ")
+# kind(B) n_parts(B) gi(H) pi(H) start(I) count(I) seq(I)
+_ENTRY = struct.Struct("<BBHHIII")
+# dtype(B) ndim(B) shape[5](I) payload_off(Q) scales_off(Q)
+_PART = struct.Struct("<BB5IQQ")
+
+_WIRE_KINDS = ("raw", "int8")
+_ENTRY_KINDS = ("kv", "mla")
+# wire payload dtypes (names resolved through jnp for bfloat16 interop)
+_DTYPES = ("float32", "bfloat16", "float16", "int8")
+
+
+def _dtype_code(dt: np.dtype) -> int:
+    name = np.dtype(dt).name if np.dtype(dt).name in _DTYPES else None
+    if name is None:
+        # ml_dtypes bfloat16 reports name "bfloat16"; anything else is a bug
+        raise ValueError(f"unsupported wire dtype {dt!r}")
+    return _DTYPES.index(name)
+
+
+def _align(off: int) -> int:
+    return (off + _ALIGN - 1) // _ALIGN * _ALIGN
+
+
+def nominal_header_bytes(n_entries: int = 1, parts_per_entry: int = 1) -> int:
+    """Planner-facing estimate of the fixed per-chunk wire overhead."""
+    return _align(_PRELUDE.size
+                  + n_entries * (_ENTRY.size + parts_per_entry * _PART.size))
+
+
+class _Part:
+    __slots__ = ("dtype", "shape", "payload_off", "scales_off")
+
+    def __init__(self, dtype: np.dtype, shape: Tuple[int, ...],
+                 payload_off: int, scales_off: int):
+        self.dtype = np.dtype(dtype)
+        self.shape = shape
+        self.payload_off = payload_off
+        self.scales_off = scales_off
+
+    @property
+    def payload_nbytes(self) -> int:
+        return int(np.prod(self.shape)) * self.dtype.itemsize
+
+    @property
+    def scales_count(self) -> int:
+        # one fp32 scale per (token, head) row: payload elems / last axis
+        return int(np.prod(self.shape)) // self.shape[-1]
+
+
+class _Entry:
+    __slots__ = ("kind", "gi", "pi", "start", "count", "seq", "parts", "src")
+
+    def __init__(self, kind: str, gi: int, pi: int, start: int, count: int,
+                 seq: int, parts: List[_Part],
+                 src: Optional[Dict[str, np.ndarray]] = None):
+        self.kind = kind
+        self.gi = gi
+        self.pi = pi
+        self.start = start
+        self.count = count
+        self.seq = seq
+        self.parts = parts
+        self.src = src                      # planned state only
+
+
+class WireChunk:
+    """One staged KV chunk in the fixed zero-copy wire layout."""
+
+    def __init__(self, wire: WireFormat, tp_p: int, seq_len: int,
+                 entries: List[_Entry], header: bytes, payload_bytes: int,
+                 total_bytes: int, buf: Optional[memoryview] = None):
+        self.wire = wire
+        self.tp_p = tp_p
+        self.seq_len = seq_len
+        self._entries = entries
+        self._header = header
+        self._payload_bytes = payload_bytes
+        self._total_bytes = total_bytes
+        self._buf = buf                     # bound state: backing buffer
+        self._local: Optional[bytearray] = None   # planned, read in-process
+
+    # -- construction: planned (P side) -------------------------------- #
+    @classmethod
+    def from_entries(cls, chunk_entries: Sequence[Tuple[str, int, int,
+                                                        Dict[str, Any]]],
+                     wire: WireFormat, tp_p: int,
+                     seq_len: int = 0) -> "WireChunk":
+        """Normalized chunk entries ``(kind, gi, pi, ent)`` → planned chunk.
+
+        kv entries carry ``k``/``v`` of (count, S, kv_heads, hd); mla
+        entries carry ``ckv``/``kpe`` of (count, S, dim). The slab plan is
+        computed here; no KV bytes move until ``write_into``."""
+        pdt = precision.wire_payload_dtype(wire)
+        int8 = wire.kind == "int8"
+        entries: List[_Entry] = []
+        payload_bytes = 0
+        # header size is layout-independent: prelude + records
+        n_parts_total = sum(2 if kind == "mla" else 1
+                            for kind, _g, _p, _e in chunk_entries)
+        off = _align(_PRELUDE.size + len(chunk_entries) * _ENTRY.size
+                     + n_parts_total * _PART.size)
+
+        for kind, gi, pi, ent in chunk_entries:
+            parts: List[_Part] = []
+            if kind == "mla":
+                ckv = np.asarray(ent["ckv"])
+                kpe = np.asarray(ent["kpe"])
+                count, s = ckv.shape[0], ckv.shape[1]
+                src = {"ckv": ckv, "kpe": kpe}
+                payload_bytes += ckv.nbytes + kpe.nbytes
+                for arr in (ckv, kpe):
+                    shape = (count * s, 1, arr.shape[-1])
+                    p = _Part(pdt, shape, off, _NO_SCALES)
+                    off = _align(off + p.payload_nbytes)
+                    if int8:
+                        p.scales_off = off
+                        off = _align(off + p.scales_count * 4)
+                    parts.append(p)
+                entries.append(_Entry("mla", gi, pi, ent["start"], count, s,
+                                      parts, src))
+                continue
+            k = np.asarray(ent["k"])
+            v = np.asarray(ent["v"])
+            count, s, kv_heads, hd = k.shape
+            assert kv_heads % tp_p == 0, (kv_heads, tp_p)
+            payload_bytes += k.nbytes + v.nbytes
+            shape = (2 * tp_p, count, s, kv_heads // tp_p, hd)
+            p = _Part(pdt, shape, off, _NO_SCALES)
+            off = _align(off + p.payload_nbytes)
+            if int8:
+                p.scales_off = off
+                off = _align(off + p.scales_count * 4)
+            entries.append(_Entry("kv", gi, pi, ent["start"], count, s,
+                                  [p], {"k": k, "v": v}))
+
+        total = off
+        header = cls._pack_header(wire, tp_p, seq_len, entries,
+                                  payload_bytes, total)
+        return cls(wire, tp_p, seq_len, entries, header, payload_bytes,
+                   total, buf=None)
+
+    @staticmethod
+    def _pack_header(wire: WireFormat, tp_p: int, seq_len: int,
+                     entries: List[_Entry], payload_bytes: int,
+                     total: int) -> bytes:
+        pdt = precision.wire_payload_dtype(wire)
+        out = [_PRELUDE.pack(MAGIC, VERSION, _WIRE_KINDS.index(wire.kind),
+                             _DTYPES.index(np.dtype(wire.dtype).name
+                                           if wire.kind == "raw"
+                                           else np.dtype(pdt).name),
+                             tp_p, len(entries), seq_len,
+                             payload_bytes, total)]
+        for e in entries:
+            out.append(_ENTRY.pack(_ENTRY_KINDS.index(e.kind), len(e.parts),
+                                   e.gi, e.pi, e.start, e.count, e.seq))
+            for p in e.parts:
+                shape5 = tuple(p.shape) + (1,) * (5 - len(p.shape))
+                out.append(_PART.pack(_dtype_code(p.dtype), len(p.shape),
+                                      *shape5, p.payload_off, p.scales_off))
+        return b"".join(out)
+
+    # -- construction: bound (D side, zero-copy) ------------------------ #
+    @classmethod
+    def from_buffer(cls, buf) -> "WireChunk":
+        """Parse the fixed header of a wire segment; slabs stay in place
+        and ``entries()`` returns views over ``buf`` (zero-copy)."""
+        mv = memoryview(buf)
+        (magic, version, kind_c, dtype_c, tp_p, n_entries, seq_len,
+         payload_bytes, total) = _PRELUDE.unpack_from(mv, 0)
+        if magic != MAGIC:
+            raise ValueError("not a fixed-layout wire segment")
+        if version != VERSION:
+            raise ValueError(f"wire format version {version} != {VERSION}")
+        wire = WireFormat(_WIRE_KINDS[kind_c], _DTYPES[dtype_c]
+                          if _WIRE_KINDS[kind_c] == "raw" else "bfloat16")
+        off = _PRELUDE.size
+        entries: List[_Entry] = []
+        for _ in range(n_entries):
+            ek, n_parts, gi, pi, start, count, seq = \
+                _ENTRY.unpack_from(mv, off)
+            off += _ENTRY.size
+            parts = []
+            for _p in range(n_parts):
+                rec = _PART.unpack_from(mv, off)
+                off += _PART.size
+                dt_c, ndim = rec[0], rec[1]
+                shape = tuple(rec[2:2 + ndim])
+                parts.append(_Part(_DTYPES[dt_c] if _DTYPES[dt_c] != "bfloat16"
+                                   else precision.wire_payload_dtype(
+                                       WireFormat("raw", "bfloat16")),
+                                   shape, rec[7], rec[8]))
+            entries.append(_Entry(_ENTRY_KINDS[ek], gi, pi, start, count,
+                                  seq, parts))
+        header = bytes(mv[:_PRELUDE.size])     # prelude copy for meta()
+        return cls(wire, tp_p, seq_len, entries, header, payload_bytes,
+                   total, buf=mv)
+
+    # -- sizes / meta ---------------------------------------------------- #
+    @property
+    def nbytes(self) -> int:
+        """Wire footprint (header + slabs) — what the segment occupies."""
+        return self._total_bytes
+
+    @property
+    def payload_nbytes(self) -> int:
+        """Raw canonical KV bytes this chunk represents (pre-encode)."""
+        return self._payload_bytes
+
+    @property
+    def header_nbytes(self) -> int:
+        return self._total_bytes - sum(
+            p.payload_nbytes + (0 if p.scales_off == _NO_SCALES
+                                else p.scales_count * 4)
+            for e in self._entries for p in e.parts)
+
+    def meta(self) -> Dict[str, Any]:
+        return {"wire": self.wire, "tp_p": self.tp_p,
+                "seq_len": self.seq_len}
+
+    # -- P side: encode straight into the destination buffer ------------- #
+    def write_into(self, buf) -> None:
+        """Execute the slab plan: cast/quantize every source array directly
+        into ``buf`` through typed views. One pass, no intermediate blob."""
+        assert all(e.src is not None for e in self._entries), \
+            "write_into on a bound chunk"
+        mv = memoryview(buf)
+        mv[:len(self._header)] = self._header
+        wire = self.wire
+        for e in self._entries:
+            if e.kind == "mla":
+                for p, name in zip(e.parts, ("ckv", "kpe")):
+                    src = e.src[name].reshape(p.shape)
+                    self._encode_part(mv, p, src, wire)
+                continue
+            (p,) = e.parts
+            n_sh, count, s, kvs, hd = p.shape
+            tp = n_sh // 2
+            # (count, S, tp·kvs, hd) → shard-major (tp, count, S, kvs, hd):
+            # the same contiguous head split np.split(axis=2) produces
+            k = np.moveaxis(e.src["k"].reshape(count, s, tp, kvs, hd), 2, 0)
+            v = np.moveaxis(e.src["v"].reshape(count, s, tp, kvs, hd), 2, 0)
+            self._encode_part(mv, p, np.concatenate([k, v], axis=0)
+                              if wire.kind == "int8" else (k, v), wire)
+
+    @staticmethod
+    def _encode_part(mv: memoryview, p: _Part, src, wire: WireFormat) -> None:
+        dst = np.frombuffer(mv, dtype=p.dtype,
+                            count=int(np.prod(p.shape)),
+                            offset=p.payload_off).reshape(p.shape)
+        if wire.kind == "raw":
+            if isinstance(src, tuple):         # kv halves: strided cast copy
+                k, v = src
+                tp = p.shape[0] // 2
+                np.copyto(dst[:tp], k, casting="unsafe")
+                np.copyto(dst[tp:], v, casting="unsafe")
+            else:
+                np.copyto(dst, src, casting="unsafe")
+            return
+        scales = np.frombuffer(mv, dtype=np.float32, count=p.scales_count,
+                               offset=p.scales_off)
+        flat = src.reshape(-1, src.shape[-2], src.shape[-1]) \
+            if src.ndim > 3 else src
+        precision.encode_wire_into(
+            flat, wire, dst.reshape(flat.shape),
+            scales.reshape(flat.shape[0], flat.shape[1], 1))
+
+    # -- in-process read path -------------------------------------------- #
+    def _backing(self) -> memoryview:
+        """Bound buffer, or a lazily encoded local one (in-process reads
+        decode the exact same bits a cross-process reader would see)."""
+        if self._buf is not None:
+            return self._buf
+        if self._local is None:
+            self._local = bytearray(self._total_bytes)
+            self.write_into(self._local)
+        return memoryview(self._local)
+
+    # -- D side: zero-copy entry views ------------------------------------ #
+    def entries(self) -> List[Dict[str, Any]]:
+        """Decoded entry descriptors with numpy views over the backing
+        buffer (no copies). Views die with the caller's frame; call
+        ``release()`` before the segment is closed."""
+        mv = self._backing()
+        out = []
+        for e in self._entries:
+            d: Dict[str, Any] = {"kind": e.kind, "gi": e.gi, "pi": e.pi,
+                                 "start": e.start, "count": e.count,
+                                 "seq": e.seq, "tp_p": self.tp_p}
+            views = [self._view(mv, p) for p in e.parts]
+            if e.kind == "mla":
+                d["payloads"] = [v[0] for v in views]
+                d["scales"] = [v[1] for v in views]
+            else:
+                d["payload"], d["scales"] = views[0]
+            out.append(d)
+        return out
+
+    @staticmethod
+    def _view(mv: memoryview, p: _Part
+              ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        pay = np.frombuffer(mv, dtype=p.dtype, count=int(np.prod(p.shape)),
+                            offset=p.payload_off).reshape(p.shape)
+        if p.scales_off == _NO_SCALES:
+            return pay, None
+        sc = np.frombuffer(mv, dtype=np.float32, count=p.scales_count,
+                           offset=p.scales_off)
+        return pay, sc
+
+    def release(self) -> None:
+        """Drop buffer references so the backing segment can be closed.
+        Any views handed out by ``entries()`` must already be dead."""
+        if self._buf is not None:
+            try:
+                self._buf.release()
+            except BufferError:
+                pass                        # a view still pins it; GC closes
+            self._buf = None
+        self._local = None

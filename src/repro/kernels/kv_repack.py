@@ -98,6 +98,59 @@ def scatter_pages(spec: KVPageSpec, pool: jax.Array, block_ids: jax.Array,
     )(block_ids, canon, pool)
 
 
+def _scatter_overlay_kernel(block_ids, canon_ref, cur_ref, pool_in_ref,
+                            pool_out_ref, *, layout: str, front: int,
+                            seq_len: int, block_size: int):
+    i = pl.program_id(0)
+    canon = canon_ref[0]                                 # (bs, kv, hd)
+    cur = jnp.transpose(cur_ref[0], _to_canon_perm(layout))
+    row = jax.lax.broadcasted_iota(jnp.int32, canon.shape, 0)
+    abs_row = i * block_size + row
+    keep = (abs_row < front) | (abs_row >= front + seq_len)
+    merged = jnp.where(keep, cur, canon.astype(cur.dtype))
+    perm = _FROM_CANON[layout]
+    pool_out_ref[0] = jnp.transpose(merged, perm).astype(pool_out_ref.dtype)
+
+
+def scatter_pages_overlay(spec: KVPageSpec, pool: jax.Array,
+                          block_ids: jax.Array, canon: jax.Array,
+                          front: int, seq_len: int,
+                          interpret: bool = False) -> jax.Array:
+    """Scatter canonical pages into ``pool`` while preserving rows outside
+    ``[front, front + seq_len)`` of the flattened page span.
+
+    ``canon``: (nb, bs, kv, hd) pages whose flat rows ``front .. front +
+    seq_len`` hold the incoming stream (outside that range the content is
+    ignored). Each grid step reads the *current* destination page — the same
+    data-dependent ``ids[i]`` prefetch as the scatter — and overlays only
+    the covered rows, so partial head/tail blocks merge inside the kernel:
+    no host-side readback, one pass per page. ``front``/``seq_len`` are
+    host-known and baked into the kernel."""
+    nb = block_ids.shape[0]
+    kernel = functools.partial(
+        _scatter_overlay_kernel, layout=spec.layout, front=front,
+        seq_len=seq_len, block_size=spec.block_size)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, spec.block_size, spec.kv_heads, spec.head_dim),
+                         lambda i, ids: (i, 0, 0, 0)),
+            pl.BlockSpec((1,) + spec.page_shape(),       # current dst page
+                         lambda i, ids: (ids[i], 0, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),        # aliased full pool
+        ],
+        out_specs=pl.BlockSpec((1,) + spec.page_shape(),
+                               lambda i, ids: (ids[i], 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, spec.jdtype),
+        input_output_aliases={3: 0},   # pool (after prefetch, canon, cur)
+        interpret=interpret,
+    )(block_ids, canon, pool, pool)
+
+
 def repack(src: KVPageSpec, dst: KVPageSpec, src_pool: jax.Array,
            src_blocks: jax.Array, dst_pool: jax.Array,
            dst_blocks: jax.Array, seq_len: int,

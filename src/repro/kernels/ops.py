@@ -60,6 +60,18 @@ def scatter_pages(spec: KVPageSpec, pool, block_ids, canon, *,
                              interpret=_interpret(force_interpret))
 
 
+@partial(jax.jit, static_argnames=("spec", "front", "seq_len",
+                                   "force_interpret"))
+def scatter_pages_overlay(spec: KVPageSpec, pool, block_ids, canon, *,
+                          front: int, seq_len: int,
+                          force_interpret: Optional[bool] = None):
+    """Scatter preserving rows outside [front, front+seq_len) (streamed
+    chunk re-page: partial head/tail blocks merge inside the kernel)."""
+    return _kr.scatter_pages_overlay(spec, pool, block_ids, canon, front,
+                                     seq_len,
+                                     interpret=_interpret(force_interpret))
+
+
 @partial(jax.jit, static_argnames=("src", "dst", "seq_len",
                                    "force_interpret"))
 def repack(src: KVPageSpec, dst: KVPageSpec, src_pool, src_blocks,

@@ -62,7 +62,8 @@ class DWorker:
         self.evt_q = evt_q
         self.engine = spec.engine.build()
         self.connector = SharedMemoryConnector(**spec.connector_kwargs)
-        self.pipeline = DisaggPipeline(self.connector, spec.wire)
+        self.pipeline = DisaggPipeline(self.connector, spec.wire,
+                                       codec=spec.codec)
         self.streams: Dict[str, _DStream] = {}
         self.emitted_tokens = 0
         # measured KV-pool footprint per paged block (exact: taken from the
@@ -154,6 +155,8 @@ class DWorker:
                     self._fail_stream(st, f"transfer failed: {e!r}")
                     progressed = True
                     break
+                if hasattr(payload, "release"):
+                    payload.release()  # drop views before the segment closes
                 self.connector.complete(key)      # detach the adoption
                 self.connector.stats.chunks += 1
                 st.pending.popleft()

@@ -175,6 +175,7 @@ class ClusterRuntime:
 
     def __init__(self, cluster: ClusterSpec, *,
                  wire=None,
+                 codec: str = "fixed",
                  connector_kwargs: Optional[Dict[str, Any]] = None,
                  prefill_chunk: Optional[int] = 16,
                  max_retries: int = 3,
@@ -186,6 +187,7 @@ class ClusterRuntime:
         self.cluster = cluster
         self._prefix = any(e.prefix_cache for e in cluster.p + cluster.d)
         self._wire = wire or WireFormat("raw", "float32")
+        self._codec = codec
         self._ck = dict(connector_kwargs or {})
         self._prefill_chunk = prefill_chunk
         self.max_retries = max_retries
@@ -224,6 +226,7 @@ class ClusterRuntime:
         iid = f"{role}{n}"
         self._used_iids.add(iid)
         spec = WorkerSpec(engine=espec, wire=self._wire,
+                          codec=self._codec,
                           connector_kwargs=self._ck,
                           prefill_chunk=self._prefill_chunk,
                           instance_id=iid,

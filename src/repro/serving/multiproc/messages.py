@@ -104,6 +104,9 @@ class WorkerSpec:
     engine: EngineSpec
     wire: WireFormat
     connector_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # chunk wire codec both ends must agree on ("fixed" zero-copy segments
+    # or the legacy "pickle" blob)
+    codec: str = "fixed"
     prefill_chunk: Optional[int] = 16
     heartbeat_s: float = 0.5
     # instance id on the control plane (defaults to the engine name; the

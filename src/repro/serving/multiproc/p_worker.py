@@ -50,7 +50,8 @@ class PWorker:
         self.evt_q = evt_q
         self.engine = spec.engine.build()
         self.connector = SharedMemoryConnector(**spec.connector_kwargs)
-        self.pipeline = DisaggPipeline(self.connector, spec.wire)
+        self.pipeline = DisaggPipeline(self.connector, spec.wire,
+                                       codec=spec.codec)
         self.backlog: Deque[SubmitPrefill] = collections.deque()
         self.staged_chunks = 0
         self.release_ack = 0              # highest ReleaseStaged.seq done

@@ -81,6 +81,18 @@ def measured_section(runtime: Any, requests: List[Any],
                 runtime.transfer_stats.wall_overlap_seconds,
             "prefix_hit_tokens": runtime.transfer_stats.prefix_hit_tokens,
             "bytes_saved": runtime.transfer_stats.bytes_saved,
+            # wire vs raw payload bytes: the int8 wire's compression and
+            # the fixed-layout format's header overhead both show up here
+            "wire_bytes": runtime.transfer_stats.bytes_moved,
+            "payload_bytes": runtime.transfer_stats.payload_bytes,
+            "wire_compression": runtime.transfer_stats.wire_compression,
+            # link congestion: modeled fair-share delay plus the measured
+            # read wall time delivered under concurrency
+            "congested_seconds": runtime.transfer_stats.congested_seconds,
+            "contended_read_seconds":
+                runtime.transfer_stats.contended_read_seconds,
+            "concurrent_reads_peak":
+                runtime.transfer_stats.concurrent_reads_peak,
         },
     }
     # measured prefix-cache hit ratio: wire tokens skipped over prompt
@@ -152,6 +164,15 @@ def format_report(rep: Dict[str, Any]) -> str:
              f"  (imbalance {m['p_imbalance']:.2f})",
              f"  d dispatches {m['d_dispatches']}"
              f"  (imbalance {m['d_imbalance']:.2f})"]
+    if m["transfer"].get("wire_bytes"):
+        t = m["transfer"]
+        lines.append(
+            f"  wire         {t['wire_bytes']} B moved for "
+            f"{t['payload_bytes']} B of KV "
+            f"(ratio {t['wire_compression']:.2f}, "
+            f"peak {t['concurrent_reads_peak']} concurrent reads, "
+            f"{t['contended_read_seconds'] * 1e3:.1f} ms read under "
+            f"contention)")
     if m["transfer"].get("prefix_hit_tokens"):
         lines.append(
             f"  prefix cache {m['transfer']['prefix_hit_tokens']} wire "

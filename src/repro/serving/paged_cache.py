@@ -104,6 +104,33 @@ def scatter_sequence(spec: KVPageSpec, pool: jax.Array, block_ids: jax.Array,
     return pool.at[block_ids].set(pages_from_canonical(spec, canon))
 
 
+def scatter_sequence_overlay(spec: KVPageSpec, pool: jax.Array,
+                             block_ids: jax.Array, kv_canon: jax.Array,
+                             front: int) -> jax.Array:
+    """Write canonical (S, kv, hd) into pool pages at ``block_ids`` starting
+    ``front`` rows into the first block, preserving existing rows outside
+    ``[front, front + S)``.
+
+    Boundary-only read-modify-write: only the first and last page are read
+    back (the head rows before ``front`` and the tail rows after the chunk);
+    interior pages are fully covered by the incoming stream. ``front`` and
+    ``S`` are host-known, so the chunk's streamed re-page costs one gather
+    of at most two pages plus one scatter — not a full readback of every
+    touched page."""
+    s = kv_canon.shape[0]
+    nb = block_ids.shape[0]
+    bs = spec.block_size
+    back = nb * bs - front - s
+    assert 0 <= front < bs and back >= 0, (front, s, nb, bs)
+    head = pages_to_canonical(spec, pool[block_ids[:1]])[0, :front]
+    tail = pages_to_canonical(spec, pool[block_ids[-1:]])[0, bs - back:]
+    full = jnp.concatenate(
+        [head.astype(spec.jdtype), kv_canon.astype(spec.jdtype),
+         tail.astype(spec.jdtype)], axis=0)
+    canon = full.reshape(nb, bs, spec.kv_heads, spec.head_dim)
+    return pool.at[block_ids].set(pages_from_canonical(spec, canon))
+
+
 def append_token(spec: KVPageSpec, pool: jax.Array, block_ids: jax.Array,
                  slot: jax.Array, kv_tok: jax.Array) -> jax.Array:
     """Write one token's KV per sequence during decode.

@@ -105,7 +105,8 @@ def test_streamed_total_bytes_match_monolithic():
     meta1 = pipe1.handoff(req, p1, d1)
 
     p2, d2 = _pair(cfg, params, vd)
-    pipe2 = DisaggPipeline(TransferEngine(), WireFormat("int8"))
+    pipe2 = DisaggPipeline(TransferEngine(), WireFormat("int8"),
+                           codec="pickle")      # legacy byte-identical wire
     meta2 = pipe2.handoff_streamed(req, p2, d2, chunk_tokens=5,
                                    chunked_compute=False)
     assert meta2["bytes"] == meta1["bytes"]
@@ -115,6 +116,18 @@ def test_streamed_total_bytes_match_monolithic():
     assert st.chunks == 3
     assert st.overlap_modeled_seconds == 0
     assert st.exposed_modeled_seconds == st.modeled_seconds
+
+    # fixed codec: the same KV crosses the wire plus only the fixed
+    # per-chunk header and 64-byte slab alignment — nothing that scales
+    # with tokens
+    p3, d3 = _pair(cfg, params, vd)
+    pipe3 = DisaggPipeline(TransferEngine(), WireFormat("int8"))
+    meta3 = pipe3.handoff_streamed(req, p3, d3, chunk_tokens=5,
+                                   chunked_compute=False)
+    st3 = pipe3.transfer.stats
+    assert st3.chunks == 3
+    overhead = meta3["bytes"] - meta1["bytes"]
+    assert 0 < overhead <= st3.chunks * 1024
 
 
 def test_no_empty_chunks_for_ring_or_states_families():

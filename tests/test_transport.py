@@ -256,10 +256,11 @@ def test_rdma_handle_completes_over_multiple_ticks():
 
 
 def test_rdma_serializes_reads_on_the_link():
-    """Two reads issued back-to-back share the wire: the second becomes
-    ready only after the first's wire time has elapsed."""
+    """In ``link_sharing="serial"`` mode two reads issued back-to-back
+    share the wire exclusively: the second becomes ready only after the
+    first's wire time has elapsed."""
     conn = ModeledRDMAConnector(fixed_latency_s=0.5, tick_seconds=0.6,
-                                bandwidth_gbps=1e9)
+                                bandwidth_gbps=1e9, link_sharing="serial")
     conn.stage("a", _payload(seed=0))
     conn.stage("b", _payload(seed=1))
     ha = conn.issue_read("a")
