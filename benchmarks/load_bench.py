@@ -1,0 +1,144 @@
+"""Open-loop load benchmark: seeded Poisson traffic against the live
+multi-process cluster runtime, with SLO-aware admission control and the
+cluster-backed autoscaler ticking during the run.
+
+Unlike ``router_bench`` (closed-loop batch replay), arrivals here follow
+a fixed schedule that does not wait for the server: TTFT measures from
+each request's *scheduled* arrival, queue buildup lands on the latency
+percentiles, and requests beyond the cluster's measured headroom are
+shed at the door. Reports goodput (finished under SLO per second) and
+TTFT/TPOT p50/p95/p99 plus admission-shed and autoscale-action counts.
+
+Writes ``BENCH_load.json`` at the repo root (CI uploads it as an
+artifact). The model is intentionally tiny — the subject is open-loop
+dynamics, not FLOPs.
+
+  PYTHONPATH=src python -m benchmarks.load_bench [--duration 8] [--rate 2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.configs.base import ModelConfig
+from repro.core.autoscale import (AutoscalerConfig, ClusterLoadSource,
+                                  PDAutoscaler)
+from repro.serving.engine import VendorProfile
+from repro.serving.loadgen import (build_workload, poisson_arrivals,
+                                   run_open_loop, WorkloadConfig)
+from repro.serving.multiproc import ClusterRuntime, ClusterSpec, EngineSpec
+from repro.serving.multiproc.report import slo_section
+from repro.serving.router import AdmissionConfig
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_load.json"
+
+CFG = ModelConfig(name="load-bench-tiny", family="dense", num_layers=2,
+                  d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                  d_ff=128, vocab_size=512, param_dtype="float32",
+                  compute_dtype="float32")
+VENDOR_P = VendorProfile("benchB", block_size=8, layout="nhbd",
+                         kv_dtype="float32", tp=2, hardware="gpu-b")
+VENDOR_D = VendorProfile("benchA", block_size=4, layout="nbhd",
+                         kv_dtype="float32", tp=1, hardware="gpu-a")
+
+SLO_TTFT_S = 2.0
+SLO_TPOT_S = 0.5
+
+
+def _espec(name: str, vendor: VendorProfile, role: str) -> EngineSpec:
+    return EngineSpec(name, CFG, vendor, params_seed=0, num_blocks=128,
+                      max_batch=4, max_seq_len=64, role=role)
+
+
+def main(out: pathlib.Path = DEFAULT_OUT, duration_s: float = 8.0,
+         rate_rps: float = 2.0, seed: int = 7, arrivals: str = "poisson",
+         autoscale: bool = True) -> dict:
+    from repro.serving.loadgen import bursty_arrivals
+    gen = poisson_arrivals if arrivals == "poisson" else bursty_arrivals
+    offsets = gen(rate_rps, duration_s, seed)
+    wl_cfg = WorkloadConfig(vocab_size=CFG.vocab_size, prompt_min=4,
+                            prompt_max=32, output_min=2, output_max=12)
+    workload = build_workload(offsets, wl_cfg, seed=seed)
+
+    admission = AdmissionConfig(max_queue_depth=8, slo_ttft_s=SLO_TTFT_S,
+                                headroom=1.0)
+    cluster = ClusterSpec(p=(_espec("P0", VENDOR_P, "prefill"),),
+                          d=(_espec("D0", VENDOR_D, "decode"),))
+    rt = ClusterRuntime(cluster, prefill_chunk=8, admission=admission)
+    scaler = None
+    try:
+        rt.start()
+        # untimed warmup through the same length mixture so first-use jit
+        # compilation doesn't masquerade as queueing delay
+        warm = build_workload([0.0, 0.0, 0.0], wl_cfg, seed=seed + 1,
+                              id_prefix="warm")
+        for it in warm:
+            it.request.max_new_tokens = 2
+        rt.serve([it.request for it in warm], max_wall_s=600.0)
+        rt.reset_latency_measurements()   # warmup TTFTs are not the system
+        if autoscale:
+            scaler = PDAutoscaler(
+                ClusterLoadSource(rt),
+                p_factory=lambda name: _espec(name, VENDOR_P, "prefill"),
+                d_factory=lambda name: _espec(name, VENDOR_D, "decode"),
+                baseline_p=1, baseline_d=1,
+                config=AutoscalerConfig(slo_ttft_s=SLO_TTFT_S,
+                                        slo_tpot_s=SLO_TPOT_S,
+                                        cooldown_ticks=8, max_p=2, max_d=2))
+        res = run_open_loop(rt, workload, autoscaler=scaler,
+                            autoscale_every_s=0.25,
+                            max_wall_s=duration_s + 600.0)
+    finally:
+        rt.shutdown()
+
+    served = [it.request for it in workload]
+    doc = {
+        "benchmark": "load",
+        "model": CFG.name,
+        "config": {"arrivals": arrivals, "rate_rps": rate_rps,
+                   "duration_s": duration_s, "seed": seed,
+                   "admission": {"max_queue_depth": admission.max_queue_depth,
+                                 "slo_ttft_s": admission.slo_ttft_s},
+                   "autoscale": autoscale},
+        "result": res.as_dict(),
+        "latency": slo_section(served, res.wall_s, slo_ttft_s=SLO_TTFT_S,
+                               slo_tpot_s=SLO_TPOT_S),
+        "runtime": {"shed": rt.stats.shed, "finished": rt.stats.finished,
+                    "failed": rt.stats.failed, "requeues": rt.stats.requeues,
+                    "autoscaler": None if scaler is None else
+                    {"grew_p": scaler.stats.grew_p,
+                     "grew_d": scaler.stats.grew_d,
+                     "drained": scaler.stats.drained}},
+    }
+    out.write_text(json.dumps(doc, indent=2) + "\n")
+    lat = doc["latency"]
+    print(f"offered {res.offered}  admitted {res.admitted}  shed {res.shed}"
+          f"  finished {res.finished}  wall {res.wall_s:.1f}s")
+    print(f"goodput {lat.get('goodput_rps', 0.0):.2f} req/s under SLO  "
+          f"ttft p50/p95/p99 {lat['ttft_p50_s']:.3f}/"
+          f"{lat['ttft_p95_s']:.3f}/{lat['ttft_p99_s']:.3f} s  "
+          f"tpot p50/p95/p99 {lat['tpot_p50_s']:.3f}/"
+          f"{lat['tpot_p95_s']:.3f}/{lat['tpot_p99_s']:.3f} s")
+    if res.autoscale_actions:
+        print("autoscale:", ", ".join(res.autoscale_actions))
+    print(f"wrote {out}")
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=8.0,
+                    help="arrival-schedule length in seconds")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="mean offered load, requests/s")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--arrivals", choices=("poisson", "bursty"),
+                    default="poisson")
+    ap.add_argument("--no-autoscale", action="store_true")
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+    main(out=args.out, duration_s=args.duration, rate_rps=args.rate,
+         seed=args.seed, arrivals=args.arrivals,
+         autoscale=not args.no_autoscale)

@@ -146,11 +146,22 @@ class ClusterLoadSource(LoadSource):
         self.rt = runtime
         self._added: Dict[str, str] = {}      # iid → role, newest last
 
+    def _members(self, role: str) -> list:
+        """Pool members counted against max_p/max_d and the drain floor:
+        includes instances still booting (spawned without waiting, Hello
+        not yet seen). Counting only *routable* members would re-trigger
+        grow every cooldown for the whole boot window — on slow hosts
+        that is many seconds — overshooting the cap with processes whose
+        imports then starve the serving loop."""
+        return [i for i in self.rt._instances.values()
+                if i.role == role and i.alive()
+                and not i.draining and not i.stopping]
+
     def num_p(self) -> int:
-        return len(self.rt._routable("P"))
+        return len(self._members("P"))
 
     def num_d(self) -> int:
-        return len(self.rt._routable("D"))
+        return len(self._members("D"))
 
     def p_queue_depth(self) -> float:
         """Parent's undispatched queue + each P's heartbeat-reported
@@ -172,21 +183,32 @@ class ClusterLoadSource(LoadSource):
             total += max(i.load.get("active", 0.0), float(i.active)) / cap
         return total / len(ds)
 
-    def _finished(self) -> List[Any]:
-        done = [r for r in self.rt._requests.values()
-                if r.finish_time is not None]
-        done.sort(key=lambda r: r.finish_time)
-        return done[-16:]
-
     def recent_ttfts(self) -> List[float]:
-        return [r.ttft() for r in self._finished() if r.ttft() is not None]
+        """Newest 16 first-token latencies, *including in-flight streams*.
+        Sampling finished requests only biased the EMA toward short,
+        already-completed requests and reacted a full request-length late
+        under ramp — a request that just got its first token after 5 s of
+        queueing is exactly the signal scale-up must see."""
+        live = [r for r in self.rt._requests.values()
+                if r.first_token_time is not None]
+        live.sort(key=lambda r: r.first_token_time)
+        return [t for t in (r.ttft() for r in live[-16:]) if t is not None]
 
     def recent_tpots(self) -> List[float]:
-        return [r.tpot() for r in self._finished() if r.tpot() is not None]
+        """Newest 16 per-token latencies, including in-flight streams
+        (``tpot_live`` uses the last emitted token as the endpoint)."""
+        live = [r for r in self.rt._requests.values()
+                if r.first_token_time is not None]
+        live.sort(key=lambda r: r.last_token_time
+                  or r.finish_time or r.first_token_time)
+        return [t for t in (r.tpot_live() for r in live[-16:])
+                if t is not None]
 
     def grow(self, name: str, role: str,
              factory: Callable[[str], Any]) -> None:
-        iid = self.rt.add_instance(factory(name), role)
+        # non-blocking: the worker becomes routable when its Hello lands;
+        # a live run must keep serving while the new process boots
+        iid = self.rt.add_instance(factory(name), role, wait=False)
         self._added[iid] = role
 
     def surplus(self, role: str) -> List[str]:

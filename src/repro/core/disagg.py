@@ -60,22 +60,24 @@ def _to_device(payload):
 
 
 def _repage_pool_body(spec: PC.KVPageSpec, pool: jax.Array, block_ids,
-                      canon: jax.Array, *, start: int, rmw: bool,
+                      canon: jax.Array, lo_block, *, front: int, rmw: bool,
                       kernel: bool) -> jax.Array:
-    """Single-pass re-page of canon (count, S, kv, hd) at absolute
-    positions [start, start+S), vmapped over the layer count.
+    """Single-pass re-page of canon (count, S, kv, hd) landing ``front``
+    rows into block ``lo_block``'s first page, vmapped over the layer
+    count. ``lo_block`` is *traced* and ``front`` (= start % block_size)
+    static: chunks at different absolute starts share one compiled
+    program as long as their in-page offset matches — streaming a long
+    prompt compiles per (chunk shape, offset-in-page), not per chunk.
 
     Unlike the legacy rmw path — which reads back *every* touched page
     and splices — the overlay scatter only reads the first/last partial
     page (jnp path) or merges partial rows inside the Pallas kernel
     (``kernel=True``), so interior pages move exactly once."""
     bs = spec.block_size
-    lo_block = start // bs
-    front = start - lo_block * bs
     s = canon.shape[1]
     s_tot = front + s
     nb = -(-s_tot // bs)
-    use = block_ids[lo_block:lo_block + nb]
+    use = jax.lax.dynamic_slice_in_dim(block_ids, lo_block, nb)
     if not rmw:
         if front:
             canon = jnp.pad(canon, ((0, 0), (front, 0), (0, 0), (0, 0)))
@@ -92,19 +94,21 @@ def _repage_pool_body(spec: PC.KVPageSpec, pool: jax.Array, block_ids,
 
 
 _repage_pool = jax.jit(_repage_pool_body,
-                       static_argnames=("spec", "start", "rmw", "kernel"))
+                       static_argnames=("spec", "front", "rmw", "kernel"))
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "wire", "tp_p", "tp_d",
-                                             "count", "start", "rmw",
+                                             "count", "front", "rmw",
                                              "kernel"))
 def _repage_kv_entry(spec: PC.KVPageSpec, k_pool: jax.Array,
-                     v_pool: jax.Array, block_ids, pay, sc, *,
+                     v_pool: jax.Array, block_ids, pay, sc, lo_block, *,
                      wire: WireFormat, tp_p: int, tp_d: int, count: int,
-                     start: int, rmw: bool, kernel: bool):
-    """One compiled program per chunk shape: dequantize the whole
-    shard-major slab (2·tp_p, count, S, kvs, hd) in one pass, realign TP
-    shards, overlay-scatter both pools."""
+                     front: int, rmw: bool, kernel: bool):
+    """One compiled program per (chunk shape, in-page offset): dequantize
+    the whole shard-major slab (2·tp_p, count, S, kvs, hd) in one pass,
+    realign TP shards, overlay-scatter both pools. The landing block
+    index rides in traced ``lo_block`` so successive chunks of a stream
+    reuse the same executable."""
     sc_j = None if sc is None else sc.reshape(pay.shape[:-1] + (1,))
     dec = precision.decode_wire(pay, sc_j, wire, spec.jdtype)
     s = pay.shape[2]
@@ -115,22 +119,22 @@ def _repage_kv_entry(spec: PC.KVPageSpec, k_pool: jax.Array,
     v_d = jnp.concatenate(
         parallel_align.realign_shards(list(dec[tp_p:]), tp_d),
         axis=1).reshape(count, s, -1, spec.head_dim)
-    return (_repage_pool_body(spec, k_pool, block_ids, k_d, start=start,
-                              rmw=rmw, kernel=kernel),
-            _repage_pool_body(spec, v_pool, block_ids, v_d, start=start,
-                              rmw=rmw, kernel=kernel))
+    return (_repage_pool_body(spec, k_pool, block_ids, k_d, lo_block,
+                              front=front, rmw=rmw, kernel=kernel),
+            _repage_pool_body(spec, v_pool, block_ids, v_d, lo_block,
+                              front=front, rmw=rmw, kernel=kernel))
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "wire", "count",
-                                             "start", "rmw", "kernel"))
+                                             "front", "rmw", "kernel"))
 def _repage_mla_part(spec: PC.KVPageSpec, pool: jax.Array, block_ids,
-                     pay, sc, *, wire: WireFormat, count: int, start: int,
-                     rmw: bool, kernel: bool) -> jax.Array:
+                     pay, sc, lo_block, *, wire: WireFormat, count: int,
+                     front: int, rmw: bool, kernel: bool) -> jax.Array:
     sc_j = None if sc is None else sc.reshape(pay.shape[0], 1, 1)
     d = precision.decode_wire(pay, sc_j, wire, spec.jdtype)
     d = d.reshape(count, -1, 1, spec.head_dim)
-    return _repage_pool_body(spec, pool, block_ids, d, start=start,
-                             rmw=rmw, kernel=kernel)
+    return _repage_pool_body(spec, pool, block_ids, d, lo_block,
+                             front=front, rmw=rmw, kernel=kernel)
 
 
 # chunk wire codecs: "fixed" stages zero-copy WireChunks (fixed binary
@@ -325,7 +329,8 @@ class DisaggPipeline:
                         spec_m, pools[name + "_pool"], bids,
                         jnp.array(pay),   # copy: don't alias the segment
                         None if sc is None else jnp.array(sc),
-                        wire=wire, count=count, start=start, rmw=rmw,
+                        start // spec_m.block_size, wire=wire, count=count,
+                        front=start % spec_m.block_size, rmw=rmw,
                         kernel=kernel)
                 caches[gi][pi] = dict(pools, **new)
                 continue
@@ -338,8 +343,9 @@ class DisaggPipeline:
                 spec, pools["k_pool"], pools["v_pool"], bids,
                 jnp.array(pay),      # copy: don't alias the shm segment
                 None if sc is None else jnp.array(sc),
-                wire=wire, tp_p=tp_p, tp_d=tp_d, count=count, start=start,
-                rmw=rmw, kernel=kernel)
+                start // spec.block_size,
+                wire=wire, tp_p=tp_p, tp_d=tp_d, count=count,
+                front=start % spec.block_size, rmw=rmw, kernel=kernel)
             caches[gi][pi] = dict(pools, k_pool=k_pool, v_pool=v_pool)
 
         d_engine.caches = tuple(tuple(g) for g in caches)
@@ -350,9 +356,10 @@ class DisaggPipeline:
                          kernel: bool = False) -> jax.Array:
         """Jit-compiled single-pass re-page (see
         :func:`_repage_pool_body`); one compiled program per
-        (spec, chunk shape, start offset)."""
+        (spec, chunk shape, in-page offset)."""
         return _repage_pool(spec, pool, jnp.asarray(block_ids, jnp.int32),
-                            jnp.asarray(canon), start=start, rmw=rmw,
+                            jnp.asarray(canon), start // spec.block_size,
+                            front=start % spec.block_size, rmw=rmw,
                             kernel=kernel)
 
     @staticmethod

@@ -1,0 +1,13 @@
+"""Open-loop heavy-traffic harness: seeded arrival processes,
+ShareGPT-like synthetic workloads, and a real-time driver that replays
+them against the cluster runtime with SLO-aware admission and live
+autoscaling."""
+from repro.serving.loadgen.arrivals import (bursty_arrivals,
+                                            poisson_arrivals)
+from repro.serving.loadgen.driver import OpenLoopResult, run_open_loop
+from repro.serving.loadgen.workload import (ScheduledRequest,
+                                            WorkloadConfig, build_workload)
+
+__all__ = ["poisson_arrivals", "bursty_arrivals", "WorkloadConfig",
+           "ScheduledRequest", "build_workload", "OpenLoopResult",
+           "run_open_loop"]

@@ -52,6 +52,9 @@ class DWorker:
     """Event loop state of one decode worker."""
 
     def __init__(self, spec: WorkerSpec, cmd_q, evt_q):
+        from repro.serving.multiproc.jit_cache import enable_jit_cache
+        enable_jit_cache(spec.jit_cache_dir)  # before any jit touches XLA
+
         import jax
 
         from repro.core.disagg import DisaggPipeline

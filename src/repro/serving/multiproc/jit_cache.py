@@ -1,0 +1,40 @@
+"""Shared persistent XLA compilation cache for worker processes.
+
+Every cluster worker builds the same jit programs (prefill chunks, decode
+step, chunk re-page) in its own process. Without a shared cache each
+process re-traces *and re-compiles* every program it encounters — on an
+N×M cluster that multiplies compilation wall time by the process count,
+and on small hosts it was the dominant cost of scaling 1P1D → 2P2D
+(the BENCH_router regression: compile, not compute, doubled).
+
+``enable_jit_cache`` points this process's JAX at a host-shared on-disk
+cache (keyed by program fingerprint + jax version, safe across
+heterogeneous EngineSpecs): the first process to compile a program
+persists it, every other process — and every later run — loads it.
+Must be called before the first jit execution; worker mains call it
+before building their engine.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+
+def enable_jit_cache(path: Optional[str]) -> bool:
+    """Route this process's XLA compilations through the on-disk cache at
+    ``path``. No-op (returns False) when ``path`` is falsy or the cache
+    cannot be set up — serving must not fail over a cache."""
+    if not path:
+        return False
+    try:
+        os.makedirs(path, exist_ok=True)
+        import jax
+        jax.config.update("jax_compilation_cache_dir", path)
+        # tiny-model programs compile in <1s each; cache them anyway —
+        # it is exactly the many-small-programs profile that multiplies
+        # across processes
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+        return True
+    except Exception:                     # noqa: BLE001 — best-effort only
+        return False

@@ -48,7 +48,9 @@ from __future__ import annotations
 import collections
 import dataclasses
 import multiprocessing as mp
+import os
 import queue
+import tempfile
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -66,7 +68,21 @@ from repro.serving.multiproc.messages import (AbortStream, BeginStream,
                                               SubmitPrefill, TokenEmitted,
                                               WorkerSpec, WorkerStats)
 from repro.serving.request import Request, State
-from repro.serving.scheduler import SchedulerStats, requeue_for_retry
+from repro.serving.router import (AdmissionConfig, should_admit,
+                                  update_ttft_ema)
+from repro.serving.scheduler import RuntimeStats, requeue_for_retry
+
+
+def default_jit_cache_dir() -> Optional[str]:
+    """Shared persistent XLA compilation-cache directory for every worker
+    process of this host. N workers (and repeat runs) compile each program
+    once instead of N times — on small hosts redundant per-process jit
+    compilation, not compute, dominated multi-instance wall time.
+    Overridable via ``REPRO_JIT_CACHE_DIR`` (empty string disables)."""
+    env = os.environ.get("REPRO_JIT_CACHE_DIR")
+    if env is not None:
+        return env or None
+    return os.path.join(tempfile.gettempdir(), "repro-jax-cache")
 
 
 def _unlink_segment(name: str) -> None:
@@ -110,6 +126,7 @@ class _Instance:
     cmd_q: Optional[Any] = None
     gen: int = 0                          # spawn generation (respawns bump)
     pid: Optional[int] = None
+    hello: bool = False                   # worker reported ready (routable)
     last_seen: float = 0.0
     draining: bool = False                # no new work routed here
     stopping: bool = False                # Shutdown sent, awaiting exit
@@ -181,6 +198,8 @@ class ClusterRuntime:
                  max_retries: int = 3,
                  stall_timeout_s: float = 120.0,
                  max_respawns: int = 4,
+                 admission: Optional[AdmissionConfig] = None,
+                 jit_cache_dir: Optional[str] = "auto",
                  fault_exit_after_chunks: Optional[int] = None,
                  fault_exit_after_tokens: Optional[int] = None):
         from repro.core.compat.precision import WireFormat
@@ -193,7 +212,12 @@ class ClusterRuntime:
         self.max_retries = max_retries
         self.stall_timeout_s = stall_timeout_s
         self.max_respawns = max_respawns
-        self.stats = SchedulerStats()
+        self.admission = admission
+        # measured TTFT EMA (arrival → first token), the admission signal
+        self.ttft_ema: Optional[float] = None
+        self._jit_cache_dir = default_jit_cache_dir() \
+            if jit_cache_dir == "auto" else jit_cache_dir
+        self.stats = RuntimeStats()
         self.transfer_stats = TransferStats()     # parent-measured + merged
         self.worker_stats: Dict[str, Dict[str, float]] = {}
         self.worker_pids: Dict[str, int] = {}
@@ -230,6 +254,7 @@ class ClusterRuntime:
                           connector_kwargs=self._ck,
                           prefill_chunk=self._prefill_chunk,
                           instance_id=iid,
+                          jit_cache_dir=self._jit_cache_dir,
                           fault_exit_after_chunks=fault_exit_after_chunks,
                           fault_exit_after_tokens=fault_exit_after_tokens)
         self._instances[iid] = _Instance(
@@ -246,6 +271,7 @@ class ClusterRuntime:
 
     def _spawn(self, inst: _Instance) -> None:
         inst.gen += 1
+        inst.hello = False
         if inst.gen > 1:
             # a respawn never re-runs the injected fault: one crash only
             inst.spec = dataclasses.replace(inst.spec,
@@ -283,14 +309,20 @@ class ClusterRuntime:
         self.shutdown()
 
     # -- elasticity (autoscaler-facing) ------------------------------------- #
-    def add_instance(self, espec: EngineSpec, role: str) -> str:
-        """Grow the pool by one member; spawns immediately when running."""
+    def add_instance(self, espec: EngineSpec, role: str,
+                     wait: bool = True) -> str:
+        """Grow the pool by one member; spawns immediately when running.
+        ``wait=False`` returns as soon as the process is launched — the
+        member becomes routable when its Hello lands (the live-autoscaling
+        path: serving must not stall while a new worker imports and
+        builds its engine)."""
         if role not in ("P", "D"):
             raise ValueError(f"role must be 'P' or 'D', got {role!r}")
         iid = self._add_member(espec, role)
         if self._evt_q is not None:
             self._spawn(self._instances[iid])
-            self._await_hello({iid}, timeout_s=120.0)
+            if wait:
+                self._await_hello({iid}, timeout_s=120.0)
         return iid
 
     def remove_instance(self, iid: str) -> None:
@@ -307,15 +339,60 @@ class ClusterRuntime:
         inst.draining = True
 
     # -- serving ------------------------------------------------------------ #
+    def queue_depth(self) -> int:
+        """Measured undispatched work: the parent's pending queue plus
+        every P's dispatched-but-unprefilled backlog (parent-authoritative
+        counters; heartbeats lag the dispatch edge)."""
+        return len(self._pending) + sum(i.queue_reqs for i in
+                                        self._instances.values()
+                                        if i.role == "P")
+
     def submit(self, req: Request) -> None:
-        req.arrival_time = req.arrival_time or time.monotonic()
+        """Non-blocking enqueue. `is None`, not falsy: an explicit 0.0
+        arrival (virtual-clock / epoch-relative schedule) is a legitimate
+        timestamp that must survive submit."""
+        if req.arrival_time is None:
+            req.arrival_time = time.monotonic()
         self._requests[req.req_id] = req
         self._pending.append(req)
         self.stats.submitted += 1
 
+    def reset_latency_measurements(self) -> None:
+        """Forget warmup-era latency samples: clear the admission TTFT
+        EMA and drop terminal requests from the measured-sample window
+        (which feeds the autoscaler's ``recent_ttfts``/``recent_tpots``).
+        Call between a warmup pass and a measured run — warmup TTFTs
+        include first-use jit compilation and would otherwise bias both
+        admission and scaling for the whole run."""
+        self.ttft_ema = None
+        for rid in [rid for rid, r in self._requests.items()
+                    if r.state in (State.FINISHED, State.FAILED,
+                                   State.SHED)]:
+            del self._requests[rid]
+
+    def try_submit(self, req: Request) -> bool:
+        """Admission-controlled non-blocking submit: shed at the door when
+        measured queue depth or TTFT-EMA headroom is exhausted
+        (``AdmissionConfig``). Shedding happens only here — an admitted
+        request is never dropped mid-stream. Returns False (request
+        terminal in ``State.SHED``, counted in ``stats.shed``) on shed."""
+        if not should_admit(self.admission, self.queue_depth(),
+                            self.ttft_ema):
+            req.state = State.SHED
+            self.stats.shed += 1
+            return False
+        self.submit(req)
+        return True
+
     def serve(self, requests: List[Request],
               max_wall_s: float = 900.0) -> Dict[str, List[int]]:
-        """Drive every request to a terminal state; returns req_id → tokens."""
+        """Drive every request to a terminal state; returns req_id → tokens.
+
+        Closed-loop batch replay: everything is enqueued *now*, so each
+        request's TTFT measures from this call (queueing included). For
+        arrival-process-driven (open-loop) serving with scheduled arrival
+        timestamps, drive ``submit``/``step`` from
+        :mod:`repro.serving.loadgen` instead."""
         for r in requests:
             self.submit(r)
         deadline = time.monotonic() + max_wall_s
@@ -341,8 +418,10 @@ class ClusterRuntime:
 
     # -- routing ------------------------------------------------------------- #
     def _routable(self, role: str) -> List[_Instance]:
+        # hello gates routing: an instance spawned without waiting
+        # (live autoscaling) joins the pool once its worker reports ready
         return [i for i in self._instances.values()
-                if i.role == role and i.alive()
+                if i.role == role and i.alive() and i.hello
                 and not i.draining and not i.stopping]
 
     def _p_snapshots(self) -> List[router.PSnapshot]:
@@ -450,6 +529,7 @@ class ClusterRuntime:
         if isinstance(msg, Hello):
             if inst is not None:
                 inst.pid = msg.pid
+                inst.hello = True
             self.worker_pids[msg.src] = msg.pid
             return
         if isinstance(msg, Heartbeat):
@@ -578,11 +658,16 @@ class ClusterRuntime:
             if req is None or rec is None:        # stale attempt's token
                 return
             req.output_tokens.append(msg.token)
+            req.last_token_time = time.monotonic()
             if msg.first:
                 rec.phase = "decode"
                 req.state = State.DECODING
                 if req.first_token_time is None:
-                    req.first_token_time = time.monotonic()
+                    req.first_token_time = req.last_token_time
+                    ttft = req.ttft()
+                    if ttft is not None and self.admission is not None:
+                        self.ttft_ema = update_ttft_ema(
+                            self.ttft_ema, ttft, self.admission.ema_alpha)
                 self.stats.p_dispatches[rec.p_id] += 1
                 self.stats.d_dispatches[rec.d_id] += 1
                 self._account_flight(rec)

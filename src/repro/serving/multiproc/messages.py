@@ -109,6 +109,10 @@ class WorkerSpec:
     codec: str = "fixed"
     prefill_chunk: Optional[int] = 16
     heartbeat_s: float = 0.5
+    # persistent XLA compilation-cache dir shared by every worker process
+    # on this host (None disables): N workers compile each jit program
+    # once, not N times — see launcher.default_jit_cache_dir
+    jit_cache_dir: Optional[str] = None
     # instance id on the control plane (defaults to the engine name; the
     # launcher keeps them unique across the pool)
     instance_id: str = ""

@@ -42,6 +42,9 @@ class PWorker:
     """Event loop state of one prefill worker."""
 
     def __init__(self, spec: WorkerSpec, cmd_q, evt_q):
+        from repro.serving.multiproc.jit_cache import enable_jit_cache
+        enable_jit_cache(spec.jit_cache_dir)  # before any jit touches XLA
+
         from repro.core.disagg import DisaggPipeline
         from repro.core.transport import SharedMemoryConnector
         self.spec = spec

@@ -50,6 +50,55 @@ def ttfts_s(requests: List[Any]) -> List[float]:
     return out
 
 
+def tpots_s(requests: List[Any]) -> List[float]:
+    """Measured per-output-token latency per finished request."""
+    return [t for t in (r.tpot() for r in requests) if t is not None]
+
+
+def goodput_rps(requests: List[Any], wall_s: float,
+                slo_ttft_s: Optional[float] = None,
+                slo_tpot_s: Optional[float] = None) -> float:
+    """Finished requests that met *every* configured SLO, per second —
+    the metric an open-loop run optimizes (raw throughput counts
+    SLO-violating responses nobody would wait for)."""
+    if not wall_s:
+        return 0.0
+    good = 0
+    for r in requests:
+        if r.finish_time is None:
+            continue
+        ttft, tpot = r.ttft(), r.tpot()
+        if slo_ttft_s is not None and (ttft is None or ttft > slo_ttft_s):
+            continue
+        if slo_tpot_s is not None and (tpot is None or tpot > slo_tpot_s):
+            continue
+        good += 1
+    return good / wall_s
+
+
+def slo_section(requests: List[Any], wall_s: float,
+                slo_ttft_s: Optional[float] = None,
+                slo_tpot_s: Optional[float] = None) -> Dict[str, Any]:
+    """Latency-distribution + goodput summary of an open-loop run: TTFT
+    and TPOT at p50/p95/p99 over the *scheduled-arrival* accounting, and
+    goodput under the configured SLOs."""
+    tt, tp = ttfts_s(requests), tpots_s(requests)
+    sec: Dict[str, Any] = {
+        "wall_s": wall_s,
+        "ttft_p50_s": percentile(tt, 50),
+        "ttft_p95_s": percentile(tt, 95),
+        "ttft_p99_s": percentile(tt, 99),
+        "tpot_p50_s": percentile(tp, 50),
+        "tpot_p95_s": percentile(tp, 95),
+        "tpot_p99_s": percentile(tp, 99),
+    }
+    if slo_ttft_s is not None or slo_tpot_s is not None:
+        sec["slo"] = {"ttft_s": slo_ttft_s, "tpot_s": slo_tpot_s}
+        sec["goodput_rps"] = goodput_rps(requests, wall_s,
+                                         slo_ttft_s, slo_tpot_s)
+    return sec
+
+
 def measured_section(runtime: Any, requests: List[Any],
                      wall_s: Optional[float] = None) -> Dict[str, Any]:
     """What the cluster actually did, per instance and in aggregate."""
@@ -62,6 +111,7 @@ def measured_section(runtime: Any, requests: List[Any],
         "submitted": runtime.stats.submitted,
         "finished": runtime.stats.finished,
         "failed": runtime.stats.failed,
+        "shed": getattr(runtime.stats, "shed", 0),
         "requeues": runtime.stats.requeues,
         "crashes": dict(runtime.crashes),
         "respawns": dict(getattr(runtime, "respawns", {})),

@@ -14,6 +14,14 @@ heartbeats. The policy mirrors the single-process ``GlobalScheduler``:
     depth first and free KV-pool bytes second — the TetriInfer-style
     per-request instance selection by load.
 
+The module also holds the *admission-control* policy for open-loop
+(heavy-traffic) serving: :class:`AdmissionConfig` + :func:`should_admit`
+decide, per arriving request, whether the cluster still has SLO headroom
+— measured queue depth below the shed watermark and the TTFT EMA inside
+the SLO budget — or whether the request must be shed at the door.
+Shedding happens only at submit: a request that was admitted is never
+dropped mid-stream.
+
 Pure functions over frozen snapshots so the policy is unit-testable
 without processes and reusable by benchmarks and the autoscaler.
 """
@@ -53,6 +61,56 @@ class DSnapshot:
     # hashing makes set membership sufficient: a prompt's leading chain
     # run inside this set IS its longest cached prefix on that instance.
     prefix_hashes: frozenset = frozenset()
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """SLO-aware admission control for open-loop load.
+
+    A request is shed at submit when either headroom signal is exhausted:
+
+      * ``max_queue_depth`` — measured undispatched queue depth (parent
+        pending + dispatched-but-unprefilled P backlog) at or above this
+        watermark means arrivals outpace drain; more queueing only adds
+        latency to every queued request.
+      * ``slo_ttft_s`` × ``headroom`` — the measured TTFT EMA crossing
+        this budget means requests already admitted are blowing the SLO;
+        admitting more cannot end well.
+
+    Either signal may be disabled with ``None``. ``ema_alpha`` weights the
+    newest TTFT sample (higher = faster reaction)."""
+    max_queue_depth: Optional[int] = None
+    slo_ttft_s: Optional[float] = None
+    headroom: float = 1.0
+    ema_alpha: float = 0.3
+
+
+def update_ttft_ema(ema: Optional[float], sample: float,
+                    alpha: float) -> float:
+    """Fold one measured TTFT into the admission EMA."""
+    return sample if ema is None else alpha * sample + (1 - alpha) * ema
+
+
+def should_admit(cfg: Optional[AdmissionConfig], queue_depth: int,
+                 ttft_ema: Optional[float]) -> bool:
+    """Pure shed decision: False when measured queue depth or TTFT-EMA
+    headroom is exhausted. No config (or no signal yet) always admits.
+
+    The TTFT gate only fires while work is actually queued: the EMA is
+    *history*, and it only refreshes when admitted requests produce first
+    tokens — shedding on a stale high EMA over an empty cluster would
+    lock every future request out (no admits → no fresh samples → shed
+    forever). An idle queue means the congestion the EMA recorded has
+    drained, so the next arrival is the probe that updates it."""
+    if cfg is None:
+        return True
+    if cfg.max_queue_depth is not None and queue_depth >= cfg.max_queue_depth:
+        return False
+    if cfg.slo_ttft_s is not None and ttft_ema is not None \
+            and queue_depth > 0 \
+            and ttft_ema > cfg.slo_ttft_s * cfg.headroom:
+        return False
+    return True
 
 
 def kv_block_bytes(cfg: ModelConfig, vendor: VendorProfile) -> int:

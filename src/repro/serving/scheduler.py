@@ -40,11 +40,19 @@ class SchedulerStats:
     finished: int = 0
     failed: int = 0
     requeues: int = 0
+    # requests rejected by admission control before entering the runtime
+    # (open-loop overload shedding — never counts a request mid-stream)
+    shed: int = 0
     chunks_streamed: int = 0
     p_dispatches: Dict[str, int] = dataclasses.field(
         default_factory=lambda: collections.defaultdict(int))
     d_dispatches: Dict[str, int] = dataclasses.field(
         default_factory=lambda: collections.defaultdict(int))
+
+
+# both runtimes (in-process GlobalScheduler, multi-process ClusterRuntime)
+# account into the same stats block; the cluster-facing name
+RuntimeStats = SchedulerStats
 
 
 # failures that void a dispatch/flight and requeue the request: a dead
@@ -331,7 +339,10 @@ class GlobalScheduler:
 
     # -- lifecycle ---------------------------------------------------------- #
     def submit(self, req: Request) -> None:
-        req.arrival_time = req.arrival_time or self.clock()
+        # `is None`, not falsy: an explicit 0.0 arrival (virtual-clock or
+        # epoch-relative schedule) is a legitimate timestamp to keep
+        if req.arrival_time is None:
+            req.arrival_time = self.clock()
         self.pending.append(req)
         self.stats.submitted += 1
 

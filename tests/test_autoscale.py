@@ -112,7 +112,10 @@ def test_no_growth_without_pressure(params):
 def test_cluster_load_source_grows_live_d_process():
     """Point the same controller at a live multi-process ClusterRuntime:
     decode-slot pressure (1 D, max_batch=2, 8 requests) must make it spawn
-    a real extra D worker via add_instance, and everything still finishes."""
+    a real extra D worker via add_instance — *without* stalling serving
+    while it boots (non-blocking grow; the member turns routable when its
+    Hello lands) — everything still finishes, and once the cluster goes
+    idle the surplus member drains back down to the baseline."""
     import time
 
     from repro.core.autoscale import ClusterLoadSource
@@ -146,9 +149,23 @@ def test_cluster_load_source_grows_live_d_process():
         assert rt._unresolved() == 0
         assert rt.stats.finished == len(reqs) and rt.stats.failed == 0
         assert auto.stats.grew_d >= 1
-        # the grown member is a real routable worker process
-        d_iids = {i.iid for i in rt._routable("D")}
-        assert "D1" in d_iids and rt.worker_pids.get("D1")
         assert all(len(r.output_tokens) == r.max_new_tokens for r in reqs)
+        # grow was non-blocking: pump until the new member's Hello lands,
+        # then it must be a real routable worker process
+        deadline = time.monotonic() + 120.0
+        while "D1" not in {i.iid for i in rt._routable("D")} \
+                and time.monotonic() < deadline:
+            rt.step(timeout=0.05)
+        assert "D1" in {i.iid for i in rt._routable("D")}
+        assert rt.worker_pids.get("D1")
+        # idle cluster: sustained low utilization drains the surplus D
+        # (never the baseline member)
+        deadline = time.monotonic() + 120.0
+        while "D1" in rt._instances and time.monotonic() < deadline:
+            rt.step(timeout=0.02)
+            auto.tick()
+        assert "D1" not in rt._instances
+        assert auto.stats.drained >= 1
+        assert "D0" in {i.iid for i in rt._routable("D")}
     finally:
         rt.shutdown()

@@ -1,0 +1,225 @@
+"""Open-loop load harness: seeded generators are deterministic, the
+driver stamps scheduled (not submit-time) arrivals, admission sheds
+exactly at the headroom watermark and never mid-stream, and the
+arrival-time submit path honours explicit 0.0 timestamps."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving.loadgen import (build_workload, bursty_arrivals,
+                                   poisson_arrivals, run_open_loop,
+                                   WorkloadConfig)
+from repro.serving.request import Request, State
+from repro.serving.router import (AdmissionConfig, should_admit,
+                                  update_ttft_ema)
+from repro.serving.scheduler import RuntimeStats
+
+
+# --------------------------------------------------------------------- #
+# generators
+# --------------------------------------------------------------------- #
+def test_poisson_arrivals_deterministic_and_bounded():
+    a = poisson_arrivals(4.0, 12.0, seed=11)
+    assert a == poisson_arrivals(4.0, 12.0, seed=11)
+    assert a != poisson_arrivals(4.0, 12.0, seed=12)
+    assert a == sorted(a)
+    assert all(0.0 <= t < 12.0 for t in a)
+    # law of large numbers sanity: 48 expected, allow wide slack
+    assert 15 < len(a) < 110
+
+
+def test_bursty_arrivals_deterministic_and_bursty():
+    x = bursty_arrivals(4.0, 30.0, seed=3)
+    assert x == bursty_arrivals(4.0, 30.0, seed=3)
+    assert x == sorted(x) and all(0.0 <= t < 30.0 for t in x)
+    # burstiness: inter-arrival squared coefficient of variation above
+    # the Poisson baseline of 1 (MMPP has strictly higher dispersion)
+    gaps = np.diff(np.asarray(x))
+    scv = gaps.var() / gaps.mean() ** 2
+    assert scv > 1.2, scv
+
+
+def test_workload_deterministic_under_seed():
+    offs = poisson_arrivals(5.0, 5.0, seed=1)
+    w1 = build_workload(offs, WorkloadConfig(), seed=9)
+    w2 = build_workload(offs, WorkloadConfig(), seed=9)
+    assert len(w1) == len(offs)
+    for a, b in zip(w1, w2):
+        assert a.offset_s == b.offset_s
+        assert np.array_equal(a.request.prompt, b.request.prompt)
+        assert a.request.max_new_tokens == b.request.max_new_tokens
+    cfg = WorkloadConfig()
+    for it in w1:
+        assert cfg.prompt_min <= it.request.prompt_len <= cfg.prompt_max
+        assert cfg.output_min <= it.request.max_new_tokens <= cfg.output_max
+
+
+# --------------------------------------------------------------------- #
+# admission policy (pure)
+# --------------------------------------------------------------------- #
+def test_should_admit_queue_watermark_is_exact():
+    cfg = AdmissionConfig(max_queue_depth=3)
+    assert should_admit(cfg, 2, None)
+    assert not should_admit(cfg, 3, None)      # at watermark: shed
+    assert not should_admit(cfg, 4, None)
+    assert should_admit(None, 10**6, None)     # no config: always admit
+
+
+def test_should_admit_ttft_gate_needs_queued_work():
+    cfg = AdmissionConfig(slo_ttft_s=1.0, headroom=1.0)
+    assert not should_admit(cfg, 1, 2.0)       # over budget, work queued
+    # over budget but idle: the EMA is stale history — admitting is the
+    # only way to refresh it (shedding here would lock out forever)
+    assert should_admit(cfg, 0, 2.0)
+    assert should_admit(cfg, 1, 0.5)           # within budget
+    assert should_admit(cfg, 1, None)          # no signal yet
+
+
+def test_update_ttft_ema():
+    assert update_ttft_ema(None, 2.0, 0.3) == 2.0
+    assert update_ttft_ema(1.0, 2.0, 0.5) == pytest.approx(1.5)
+
+
+# --------------------------------------------------------------------- #
+# submit-path arrival stamping (the `or` → `is None` regression)
+# --------------------------------------------------------------------- #
+def _tiny_cluster_runtime(**kw):
+    from repro.serving.engine import VendorProfile
+    from repro.serving.multiproc import (ClusterRuntime, ClusterSpec,
+                                         EngineSpec)
+    from tests.conftest import TINY_FAMILIES
+    cfg = TINY_FAMILIES["dense"]
+    mk = lambda name, role: EngineSpec(name, cfg,
+                                       VendorProfile("A", block_size=8),
+                                       params_seed=0, num_blocks=64,
+                                       max_batch=2, max_seq_len=64,
+                                       role=role)
+    # never started: submit/try_submit are parent-side bookkeeping only
+    return ClusterRuntime(ClusterSpec(p=(mk("P0", "prefill"),),
+                                      d=(mk("D0", "decode"),)), **kw)
+
+
+def _req(rid, arrival=None):
+    return Request(req_id=rid, prompt=np.arange(8, dtype=np.int32),
+                   max_new_tokens=4, arrival_time=arrival)
+
+
+def test_submit_preserves_explicit_zero_arrival_time():
+    rt = _tiny_cluster_runtime()
+    r0 = _req("zero", arrival=0.0)
+    rt.submit(r0)
+    # regression: `arrival_time or time.monotonic()` treated an explicit
+    # 0.0 (virtual-clock epoch) as "unset" and overwrote the schedule
+    assert r0.arrival_time == 0.0
+    r1 = _req("unset", arrival=None)
+    before = time.monotonic()
+    rt.submit(r1)
+    assert r1.arrival_time is not None and r1.arrival_time >= before
+
+
+def test_try_submit_sheds_at_watermark_and_counts():
+    rt = _tiny_cluster_runtime(
+        admission=AdmissionConfig(max_queue_depth=2))
+    rs = [_req(f"s{i}") for i in range(5)]
+    admitted = [rt.try_submit(r) for r in rs]
+    assert admitted == [True, True, False, False, False]
+    assert rt.stats.shed == 3 and rt.stats.submitted == 2
+    assert all(r.state == State.SHED for r, ok in zip(rs, admitted)
+               if not ok)
+
+
+# --------------------------------------------------------------------- #
+# open-loop driver over a stub runtime
+# --------------------------------------------------------------------- #
+class _StubRuntime:
+    """Minimal try_submit/step surface: finishes ``per_step`` queued
+    requests per step, records submit wall times."""
+
+    def __init__(self, admission=None, per_step=1):
+        self.admission = admission
+        self.ttft_ema = None
+        self.stats = RuntimeStats()
+        self.queue = []
+        self.per_step = per_step
+        self.submit_walls = {}
+
+    def queue_depth(self):
+        return len(self.queue)
+
+    def try_submit(self, req):
+        if not should_admit(self.admission, self.queue_depth(),
+                            self.ttft_ema):
+            req.state = State.SHED
+            self.stats.shed += 1
+            return False
+        self.submit_walls[req.req_id] = time.monotonic()
+        self.stats.submitted += 1
+        self.queue.append(req)
+        return True
+
+    def step(self, timeout=0.0):
+        for r in self.queue[:self.per_step]:
+            now = time.monotonic()
+            r.first_token_time = r.first_token_time or now
+            r.last_token_time = now
+            r.output_tokens = list(range(r.max_new_tokens))
+            r.finish_time = now
+            r.state = State.FINISHED
+            self.stats.finished += 1
+        del self.queue[:self.per_step]
+
+
+def _workload(offsets):
+    return build_workload(list(offsets), WorkloadConfig(), seed=5)
+
+
+def test_driver_stamps_scheduled_arrival_not_submit_wall():
+    rt = _StubRuntime()
+    wl = _workload([0.0, 0.12])
+    res = run_open_loop(rt, wl, max_wall_s=30.0)
+    assert res.finished == 2 and res.shed == 0
+    r0, r1 = wl[0].request, wl[1].request
+    # arrivals are the *schedule* rebased onto one epoch: exact spacing
+    assert r1.arrival_time - r0.arrival_time == pytest.approx(0.12,
+                                                              abs=1e-9)
+    # scheduled arrival never postdates the actual submit: queueing and
+    # driver lag land on TTFT, as an external client would measure
+    for it in wl:
+        assert it.request.arrival_time <= \
+            rt.submit_walls[it.request.req_id]
+        assert it.request.ttft() is not None and it.request.ttft() >= 0.0
+
+
+def test_driver_sheds_exactly_at_headroom_never_mid_stream():
+    # everything due at t=0 and nothing drains until after admission:
+    # with a watermark of 2 the third arrival onward is shed at the door
+    rt = _StubRuntime(admission=AdmissionConfig(max_queue_depth=2),
+                      per_step=1)
+    wl = _workload([0.0] * 5)
+    res = run_open_loop(rt, wl, max_wall_s=30.0)
+    assert res.offered == 5
+    assert res.admitted == 2 and res.shed == 3
+    assert rt.stats.shed == 3
+    states = [it.request.state for it in wl]
+    assert states.count(State.SHED) == 3
+    # an admitted request is never shed later: it runs to completion
+    assert states.count(State.FINISHED) == 2
+    assert res.finished == 2 and res.failed == 0
+
+
+def test_driver_ticks_autoscaler_and_collects_actions():
+    class _Scaler:
+        def __init__(self):
+            self.ticks = 0
+
+        def tick(self):
+            self.ticks += 1
+            return "grow-d:D-auto0" if self.ticks == 1 else None
+
+    rt = _StubRuntime(per_step=1)
+    sc = _Scaler()
+    res = run_open_loop(rt, _workload([0.0, 0.05, 0.30]), autoscaler=sc,
+                        autoscale_every_s=0.05, max_wall_s=30.0)
+    assert sc.ticks >= 2
+    assert res.autoscale_actions == ["grow-d:D-auto0"]
