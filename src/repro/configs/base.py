@@ -75,6 +75,42 @@ class FrontendConfig:
 
 
 @dataclass(frozen=True)
+class PrefillCapabilities:
+    """What the prefill path can do for one model family — the prefill
+    analogue of the connector ``capabilities()`` descriptor: a frozen
+    dataclass that the engine, scheduler, router, and planner *consume*
+    (no ``cfg.attention_kind`` string checks outside this module).
+
+      incremental      chunk-at-a-time prefill compute (every family —
+                       attention chunks against a position-tagged cache,
+                       recurrent/SSM layers carry state across chunks,
+                       enc-dec/vision run a preamble then chunk tokens)
+      resumable        a mid-stream snapshot (layer states + window KV
+                       tail) restarts compute at the crash point instead
+                       of from token 0
+      prefix_cache     shared-prefix KV replay/skip is *safe*: every
+                       cached row is still attendable by later tokens
+                       (false for ring-buffer caches, which only retain
+                       the last window of whatever prompt built them)
+      encoder_preamble a non-resumable encoder/vision pass must run on P
+                       before token chunking starts
+      kv_on_wire       per-token KV ships P→D (false for pure-SSM
+                       stacks, whose handoff is states only)
+      latent_kv        KV is the MLA compressed latent (ckv+kpe), which
+                       changes wire bytes/token and pool layout
+      window           sliding-window size (0 = full attention)
+    """
+    family: str
+    incremental: bool
+    resumable: bool
+    prefix_cache: bool
+    encoder_preamble: bool
+    kv_on_wire: bool
+    latent_kv: bool
+    window: int = 0
+
+
+@dataclass(frozen=True)
 class ConnectorConfig:
     """Deployment-side selection of the P→D KV-transport backend.
 
@@ -149,17 +185,41 @@ class ModelConfig:
     def is_moe(self) -> bool:
         return self.moe is not None and self.moe.num_experts > 0
 
+    def prefill_capabilities(self) -> PrefillCapabilities:
+        """Derive the per-family prefill capability descriptor. This is
+        the single place family structure maps to prefill behaviour —
+        everything downstream consumes the dataclass."""
+        kinds = set(self.layer_kinds())
+        preamble = self.is_enc_dec or self.frontend.kind in ("vision",
+                                                             "audio")
+        window = self.sliding_window if self.attention_kind == "sliding" \
+            else 0
+        has_state = (RECURRENT in kinds) or (SSD in kinds)
+        return PrefillCapabilities(
+            family=self.family,
+            incremental=True,
+            # snapshot resume needs bounded carried state: layer states
+            # and/or a window KV tail. Full-attention KV grows with the
+            # prompt (those families resume via the prefix cache), and a
+            # preamble (encoder memory) is not snapshot-restorable.
+            resumable=(has_state or window > 0) and not preamble,
+            prefix_cache=(self.family in ("dense", "moe")
+                          and self.attention_kind in ("full", "mla")
+                          and not preamble),
+            encoder_preamble=preamble,
+            kv_on_wire=ATTN in kinds,
+            latent_kv=self.attention_kind == "mla",
+            window=window)
+
     @property
     def supports_chunked_prefill(self) -> bool:
-        """Incremental (chunk-at-a-time) prefill compute needs a pure
-        attention stack: no recurrent/SSM state threading, no encoder
-        memory, no multimodal prefix, no ring-buffer (sliding) eviction
-        during the prompt. Both the serving engine and the planner's
-        overlap model key off this."""
-        return (self.family in ("dense", "moe")
-                and self.attention_kind in ("full", "mla")
-                and not self.is_enc_dec
-                and self.frontend.kind not in ("vision", "audio"))
+        """Incremental (chunk-at-a-time) prefill compute — now supported
+        for every family (see ``prefill_capabilities``): attention-only
+        stacks chunk against a dense position-tagged cache, sliding
+        windows chunk with window-aware masking, recurrent/SSM layers
+        carry state across chunks, and enc-dec/multimodal families run
+        their encoder preamble once then chunk the token sequence."""
+        return self.prefill_capabilities().incremental
 
     @property
     def pdtype(self):

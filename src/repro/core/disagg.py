@@ -449,11 +449,12 @@ class DisaggPipeline:
     def handoff_streamed(self, req: Request, p_engine: Engine,
                          d_engine: Engine,
                          chunk_tokens: Optional[int] = None,
-                         chunked_compute: Optional[bool] = None
-                         ) -> Dict[str, Any]:
+                         chunked_compute: Optional[bool] = None,
+                         mode=None) -> Dict[str, Any]:
         """Drive a full streamed handoff synchronously (tests / examples;
         the global scheduler advances the same protocol tick by tick)."""
-        stream = p_engine.prefill_stream(req, chunk_tokens, chunked_compute)
+        stream = p_engine.prefill_stream(req, chunk_tokens, chunked_compute,
+                                         mode=mode)
         h = self.begin_handoff(req, p_engine, d_engine, stream.seq_len,
                                compute_overlapped=stream.chunked_compute)
         try:
@@ -461,6 +462,8 @@ class DisaggPipeline:
                 chunk = stream.next_chunk()
                 if chunk is None:
                     break
+                if not chunk["kv"] and chunk["length"] == 0:
+                    continue            # compute-only progress marker
                 h.send_chunk(chunk)
                 h.poll_reads()          # re-page whatever the wire delivered
             return h.finalize(stream.first_token, stream.tail_package())

@@ -26,12 +26,16 @@ from repro.core.planner.workload import Workload
 def kv_wire_bytes_per_token(cfg: ModelConfig, wbytes: int = 2) -> int:
     """Canonical per-token P→D wire bytes across all attention layers —
     the single source for both the event sim's transfer time and the
-    connector-granularity chunk sizing (attention-kind aware: MLA ships
-    the latent cache, states-only families ship no per-token KV)."""
-    if cfg.attention_kind == "mla":
-        per_tok = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * wbytes
-    elif cfg.attention_kind == "none":
+    connector-granularity chunk sizing. Family-awareness routes through
+    ``cfg.prefill_capabilities()``: latent-KV families ship the latent
+    cache, states-only families (no KV on the wire) ship no per-token
+    bytes at all (their recurrent state travels once in the tail
+    package, amortized to ~0 per token)."""
+    caps = cfg.prefill_capabilities()
+    if not caps.kv_on_wire:
         per_tok = 0
+    elif caps.latent_kv:
+        per_tok = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * wbytes
     else:
         per_tok = 2 * max(cfg.num_kv_heads, 1) * cfg.hd * wbytes
     n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
@@ -64,6 +68,11 @@ class SimResult:
     total_tokens: int
     p_busy: float = 0.0
     d_busy: float = 0.0
+    #: seconds of prefill compute executed on ``role="both"`` instances
+    #: while decode work sat active/waiting on the same timeline — the
+    #: modeled decode stall the paper's disagg design removes. Compare
+    #: against the measured ``EngineStats.contention_stall_seconds``.
+    contention_stall_s: float = 0.0
 
     def _done(self) -> List[SimRequest]:
         return [r for r in self.requests if r.finish >= 0]
@@ -110,7 +119,8 @@ class SimResult:
         return {"ttft_mean_s": self.ttft_mean(), "ttft_p99_s": self.ttft_p99(),
                 "tpot_mean_s": self.tpot_mean(),
                 "throughput_tok_s": self.throughput_tok_s(),
-                "completed": float(self.completed())}
+                "completed": float(self.completed()),
+                "contention_stall_s": self.contention_stall_s}
 
 
 class _Instance:
@@ -127,6 +137,7 @@ class _Instance:
         self.decode_wait: List[SimRequest] = []
         self.busy_prefill = 0.0
         self.busy_decode = 0.0
+        self.stall = 0.0            # prefill time while decode work waited
         self.working = False
 
     # queue-depth proxies for routing
@@ -182,8 +193,15 @@ def simulate(cfg: ModelConfig, wl: Workload, *,
                   for i in range(n_decode)]
         insts = p_pool + d_pool
 
-    # P→D wire bytes per request (canonical KV of the prompt)
-    kv_bytes = kv_wire_bytes_per_token(cfg) * wl.input_len
+    # P→D wire bytes per request (canonical KV of the prompt). Encoder
+    # preamble families also ship per-position KV for the encoder output:
+    # enc-dec streams cross-KV rows (one set per decoder layer — same
+    # width as self-KV), vision frontends prepend patch rows to the
+    # decoded sequence itself.
+    wire_len = wl.input_len
+    if cfg.prefill_capabilities().encoder_preamble:
+        wire_len += wl.encoder_len
+    kv_bytes = kv_wire_bytes_per_token(cfg) * wire_len
     if mode != "disagg":
         xfer = 0.0
     elif connector_caps is not None:
@@ -232,8 +250,12 @@ def simulate(cfg: ModelConfig, wl: Workload, *,
             # prefill-priority (the paper's baseline behaviour)
             if inst.role in ("prefill", "both") and inst.prefill_q:
                 r = inst.prefill_q.pop(0)
-                dt = inst.model.prefill_latency(r.input_len)
+                dt = inst.model.prefill_latency(r.input_len,
+                                                encoder_tokens=wl.encoder_len)
                 inst.busy_prefill += dt
+                if inst.role == "both" and (inst.decode_active or
+                                            inst.decode_wait):
+                    inst.stall += dt
                 r.prefill_start = now
                 r.first_token = now + dt       # first token from prefill
                 r.tokens_emitted = 1
@@ -283,4 +305,5 @@ def simulate(cfg: ModelConfig, wl: Workload, *,
     db = sum(i.busy_decode for i in insts)
     return SimResult(requests=reqs, duration=dur, total_tokens=total_tokens,
                      p_busy=pb / (len(insts) * dur),
-                     d_busy=db / (len(insts) * dur))
+                     d_busy=db / (len(insts) * dur),
+                     contention_stall_s=sum(i.stall for i in insts))

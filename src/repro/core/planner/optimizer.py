@@ -93,8 +93,9 @@ class DeploymentPlan:
 
 def _kv_tp(cfg: ModelConfig, want: int) -> int:
     """Largest KV-shard TP ≤ the planned TP that divides the model's KV
-    heads (1 for MLA: the latent KV is not head-sharded)."""
-    if cfg.attention_kind == "mla":
+    heads (1 for latent-KV families: the latent cache is not
+    head-sharded)."""
+    if cfg.prefill_capabilities().latent_kv:
         return 1
     heads = max(cfg.num_kv_heads, 1)
     return max(t for t in range(1, max(want, 1) + 1) if heads % t == 0)

@@ -182,9 +182,10 @@ def page_rounded_kv_bytes(cfg: ModelConfig, seq_len: int, block_size: int,
     """VRAM management layer: paged allocation rounds up to block_size."""
     blocks = math.ceil(max(seq_len, 1) / block_size)
     alloc = blocks * block_size
-    if cfg.attention_kind == "mla":
+    caps = cfg.prefill_capabilities()
+    if caps.latent_kv:
         per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
-    elif cfg.attention_kind == "none":
+    elif not caps.kv_on_wire:
         s = cfg.ssm
         return s.n_heads(cfg.d_model) * s.head_dim * s.d_state * 4 * cfg.num_layers
     else:
@@ -323,11 +324,30 @@ class InstanceModel:
         self.wb = _dtype_bytes(cfg)
 
     # -- Eq. (2): l_p ------------------------------------------------------ #
-    def prefill_latency(self, seq_len: int) -> float:
+    def prefill_latency(self, seq_len: int, encoder_tokens: int = 0) -> float:
+        """``encoder_tokens``: encoder positions (audio frames / image
+        patches) run as a non-resumable P-side preamble before token
+        chunks. For enc-dec families this adds the encoder stack's cost
+        (``encoder_layers`` attention layers over the source length); for
+        vision frontends the patch rows join the decoded sequence itself,
+        so they extend the effective prefill length instead."""
         cfg, strat = self.cfg, self.strat
         s_eff = int(seq_len * (1.0 - self.fw.prefix_cache_hit))
         total = 0.0
         comm = 0.0
+        if encoder_tokens > 0 and cfg.prefill_capabilities().encoder_preamble:
+            if cfg.is_enc_dec:
+                enc_ops: List[Op] = []
+                for _ in range(cfg.encoder_layers):
+                    enc_ops.extend(layer_ops(cfg, ATTN, "prefill",
+                                             encoder_tokens, encoder_tokens,
+                                             False, self.wb))
+                for o in align_ops(cfg, enc_ops, strat):
+                    total += op_time(o, self.hw, self.fw)
+                comm += 2 * cfg.encoder_layers * allreduce_time(
+                    encoder_tokens * cfg.d_model * self.wb, strat.tp, self.hw)
+            else:
+                s_eff += encoder_tokens
         for i, kind in enumerate(cfg.layer_kinds()):
             moe_layer = cfg.is_moe and i >= (cfg.moe.first_dense_layers or 0)
             ops = layer_ops(cfg, kind, "prefill", s_eff, s_eff, moe_layer,

@@ -11,9 +11,13 @@ class Workload:
     output_len: int               # generated tokens
     slo_ttft_s: float = 2.0       # L_ttft
     slo_tpot_s: float = 0.1       # L_tpot
+    encoder_len: int = 0          # encoder positions (audio frames / image
+                                  # patches) run as a P-side preamble; 0 for
+                                  # text-only families
 
     def label(self) -> str:
-        return f"{self.input_len}+{self.output_len} QPS{self.qps:g}"
+        base = f"{self.input_len}+{self.output_len} QPS{self.qps:g}"
+        return f"{base} enc{self.encoder_len}" if self.encoder_len else base
 
 
 # the paper's experimental points

@@ -138,13 +138,19 @@ def abstract_params(cfg: ModelConfig) -> Params:
 # Caches
 # --------------------------------------------------------------------------- #
 def layer_cache_init(cfg: ModelConfig, kind: str, cross: bool, batch: int,
-                     capacity: int, dtype, mem_len: int = 0):
+                     capacity: int, dtype, mem_len: int = 0,
+                     full_capacity: bool = False):
     if kind == SSD:
         return L.ssm_state_init(batch, cfg, dtype)
     if kind == RECURRENT:
         return L.rglru_state_init(batch, cfg, dtype)
     cap = capacity
-    if cfg.attention_kind == "sliding" and cfg.sliding_window:
+    if (cfg.attention_kind == "sliding" and cfg.sliding_window
+            and not full_capacity):
+        # ring buffer sized to the window. Chunked prefill must opt OUT
+        # (full_capacity): writing chunk c would evict positions still
+        # inside the window of chunk c's own queries; window masking is
+        # applied by attention instead, so slot == position.
         cap = min(cap, cfg.sliding_window)
     if cfg.attention_kind == "mla":
         c = L.mla_cache_init(batch, cap, cfg, dtype)
@@ -159,7 +165,7 @@ def layer_cache_init(cfg: ModelConfig, kind: str, cross: bool, batch: int,
 
 
 def init_caches(cfg: ModelConfig, batch: int, capacity: int,
-                dtype=None, mem_len: int = 0):
+                dtype=None, mem_len: int = 0, full_capacity: bool = False):
     """Nested cache pytree matching ``params['groups']`` structure, with every
     leaf stacked (count, ...) per group position."""
     dtype = dtype or cfg.cdtype
@@ -168,7 +174,7 @@ def init_caches(cfg: ModelConfig, batch: int, capacity: int,
         per_pos = []
         for kind in g.kinds:
             one = layer_cache_init(cfg, kind, g.cross, batch, capacity,
-                                   dtype, mem_len)
+                                   dtype, mem_len, full_capacity)
             per_pos.append(jax.tree.map(
                 lambda x: jnp.broadcast_to(x[None], (g.count,) + x.shape), one))
         out.append(tuple(per_pos))
@@ -243,8 +249,12 @@ def _apply_layer_full(p, cfg: ModelConfig, g: Group, kind: str, x,
 def _apply_layer_decode(p, cfg: ModelConfig, g: Group, kind: str, x,
                         positions, cache):
     if kind == SSD:
-        h, st = L.ssd_decode(p["ssd"], cfg,
-                             L.rms_norm(p["norm"], x, cfg.norm_eps), cache)
+        # ssd_decode is the single-token recurrence; multi-token chunks
+        # (chunked prefill) go through the chunk-scan with the incoming
+        # state as scan carry. Static shape branch — resolved at trace.
+        ssd = L.ssd_block if x.shape[1] > 1 else L.ssd_decode
+        h, st = ssd(p["ssd"], cfg,
+                    L.rms_norm(p["norm"], x, cfg.norm_eps), cache)
         return x + h, st
     if kind == RECURRENT:
         h, st = L.rglru_decode(p["rglru"], cfg,
@@ -437,10 +447,36 @@ def decode_step(params, cfg: ModelConfig, tokens: jax.Array,
     """One decode step. tokens: (B,T) new token ids; positions: (B,T) absolute
     (text-space positions are offset by num_patches for VLM prompts upstream).
     Returns (logits (B,T,V), caches)."""
-    x = embed_tokens(params, cfg, tokens)
+    return decode_step_embeds(params, cfg, embed_tokens(params, cfg, tokens),
+                              positions, caches)
+
+
+def decode_step_embeds(params, cfg: ModelConfig, embeds: jax.Array,
+                       positions: jax.Array, caches):
+    """Decode path over precomputed embeddings (B,T,d) — the chunked-prefill
+    route for multimodal prompts, where patch embeddings and token
+    embeddings interleave in one merged sequence."""
+    x = embeds.astype(cfg.cdtype)
     x, caches = _run_groups(params, cfg, block_groups(cfg), params["groups"],
                             x, "decode", positions, None, caches)
     return lm_logits(params, cfg, x), caches
+
+
+def encoder_cross_kv(params, cfg: ModelConfig, memory: jax.Array):
+    """Per-decoder-layer cross-attention K/V from encoder ``memory``
+    (B,S_mem,d) — the non-resumable preamble of a chunked enc-dec prefill.
+    Returns {(gi, pi): (mk, mv)} with mk/mv stacked (count, B, S_mem, KV, hd)
+    to match the cache leaf layout (tuple keys stay static under jit)."""
+    out = {}
+    for gi, g in enumerate(block_groups(cfg)):
+        if not g.cross:
+            continue
+        for pi, _kind in enumerate(g.kinds):
+            cp = params["groups"][gi][pi]["cross"]
+            mk, mv = jax.vmap(
+                lambda c: L.cross_attention_kv(c, cfg, memory))(cp)
+            out[(gi, pi)] = (mk, mv)
+    return out
 
 
 # --------------------------------------------------------------------------- #

@@ -12,7 +12,10 @@ launcher.
 from __future__ import annotations
 
 import dataclasses
+import enum
+import logging
 import time
+import warnings
 from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -20,11 +23,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, PrefillCapabilities
 from repro.models import model as M
 from repro.serving.paged_cache import BlockAllocator, KVPageSpec
 from repro.serving.prefix_cache import HostPrefixStore, PrefixStore, hashing
 from repro.serving.request import Request, State
+
+log = logging.getLogger(__name__)
+
+
+class PrefillMode(enum.Enum):
+    """Explicit prefill compute mode (replaces the old chunk_tokens
+    None/0/negative sentinel tri-state).
+
+      INCREMENTAL  chunk-at-a-time compute; requires positive chunk_tokens
+      MONOLITHIC   whole-prompt compute in one pass (the wire may still
+                   stream in chunk_tokens slices)
+      AUTO         incremental when the family supports it and
+                   chunk_tokens subdivides the prompt, else monolithic
+    """
+    INCREMENTAL = "incremental"
+    MONOLITHIC = "monolithic"
+    AUTO = "auto"
+
+
+class PrefillModeError(ValueError):
+    """A requested prefill mode is unsupported for this engine/request —
+    typed so callers can distinguish a capability mismatch from generic
+    argument errors."""
+
+
+# families already warned about silent prefix-replay degradation (log
+# once per family, count every occurrence in EngineStats)
+_RESUME_WARNED: set = set()
 
 
 def page_specs_for(cfg: ModelConfig, block_size: int, layout: str,
@@ -62,6 +93,16 @@ class EngineStats:
     failures_injected: int = 0
     prefix_cached_tokens: int = 0   # prompt tokens replayed from the P-side
     #                                 host prefix store instead of recomputed
+    # measured decode-stall: prefill compute seconds spent on an integrated
+    # (role="both") engine while decode-ready sequences sat waiting — the
+    # interference disaggregation removes (~0 on pure P or pure D roles)
+    contention_stall_seconds: float = 0.0
+    # requests that wanted prefix-cache replay / mid-stream resume but the
+    # family cannot support it — previously a silent full recompute
+    resume_unsupported: int = 0
+    # prompt tokens whose compute was skipped via a mid-stream snapshot
+    # resume after a failure (state-carrying families)
+    resumed_tokens: int = 0
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -119,62 +160,113 @@ class PrefillStream:
     """Resumable chunked prefill on one P engine (paper §III-B overlap).
 
     ``next_chunk()`` yields KV chunk packages ``{"kv": entries, "start",
-    "length"}`` until exhausted (then returns ``None``). Two compute modes:
+    "length"}`` until exhausted (then returns ``None``). Two compute modes
+    (:class:`PrefillMode`):
 
-      * *incremental* — attention-only families run the prompt through the
-        decode path over a dense prompt-capacity cache, one chunk of tokens
-        per call, so each chunk's KV can hit the wire while the next chunk
-        computes (Mooncake-style layer/chunk-wise streaming).
-      * *monolithic*  — families with recurrent/SSM state, encoders, or
-        multimodal frontends compute the whole prompt in one pass on the
-        first call; the wire still streams in ``chunk_tokens`` slices.
+      * *incremental* — every family runs the prompt through the decode
+        path over a dense full-capacity cache, one chunk of tokens per
+        call, so each chunk's KV can hit the wire while the next chunk
+        computes (Mooncake-style streaming). Sliding-window families chunk
+        with window-aware masking and ship only positions above the window
+        floor; recurrent/SSM layers carry their state across chunks (and
+        can snapshot/resume mid-stream); enc-dec and vision families run a
+        non-resumable encoder/embedding preamble, then chunk the sequence.
+      * *monolithic*  — whole-prompt compute in one pass on the first
+        call; the wire still streams in ``chunk_tokens`` slices.
 
     ``first_token`` / ``tail_package()`` (states, cross-attention memory)
     become available once the final chunk has been produced."""
 
     def __init__(self, engine: "Engine", req: Request,
                  chunk_tokens: Optional[int] = None,
-                 chunked_compute: Optional[bool] = None):
+                 chunked_compute: Optional[bool] = None,
+                 mode: Optional[PrefillMode] = None,
+                 resume: Optional[Dict[str, Any]] = None):
         self.engine = engine
         self.req = req
+        self.caps: PrefillCapabilities = engine.prefill_capabilities()
         patches = req.patches.shape[0] if req.patches is not None else 0
         self.seq_len = req.prompt_len + patches
         if chunk_tokens is not None and chunk_tokens <= 0:
-            chunk_tokens = None               # 0/negative = monolithic
+            warnings.warn(
+                "chunk_tokens <= 0 as a monolithic sentinel is deprecated; "
+                "pass mode=PrefillMode.MONOLITHIC", DeprecationWarning,
+                stacklevel=3)
+            chunk_tokens = None               # deprecated shim
         self.chunk_tokens = chunk_tokens
-        if chunked_compute is None:
-            chunked_compute = engine.supports_chunked_prefill
-        elif chunked_compute and not engine.supports_chunked_prefill:
-            raise ValueError(
-                f"{engine.cfg.name}: incremental chunked prefill is not "
-                "supported for this family (ring-buffer, recurrent/SSM, "
-                "enc-dec, or multimodal prefix)")
-        self.chunked_compute = (chunked_compute
-                                and chunk_tokens is not None
-                                and chunk_tokens < self.seq_len)
+        if mode is None:
+            # deprecated bool kwarg shim: True/False force the mode, None
+            # keeps the automatic choice
+            if chunked_compute is None:
+                mode = PrefillMode.AUTO
+            else:
+                mode = PrefillMode.INCREMENTAL if chunked_compute \
+                    else PrefillMode.MONOLITHIC
+        if not isinstance(mode, PrefillMode):
+            raise PrefillModeError(f"unknown prefill mode {mode!r}")
+        self.mode = mode
+        if mode is PrefillMode.INCREMENTAL:
+            if not self.caps.incremental:
+                raise PrefillModeError(
+                    f"{engine.cfg.name}: incremental chunked prefill is not "
+                    f"supported for family {self.caps.family!r}")
+            if chunk_tokens is None:
+                raise PrefillModeError(
+                    f"{engine.cfg.name}: PrefillMode.INCREMENTAL requires "
+                    "positive chunk_tokens")
+            self.chunked_compute = True
+        elif mode is PrefillMode.MONOLITHIC:
+            self.chunked_compute = False
+        else:
+            self.chunked_compute = (self.caps.incremental
+                                    and chunk_tokens is not None
+                                    and chunk_tokens < self.seq_len)
         self.first_token: Optional[int] = None
         self.chunks_emitted = 0
         self._next_start = 0
+        self._wire_sent = 0                           # wire progress (abs pos)
         self._tail: Optional[Dict[str, Any]] = None
         self._entries: Optional[List[Tuple]] = None   # monolithic mode
         self._caches = None                           # incremental mode
+        self._emb = None                              # vision: merged embeds
+        # mid-stream snapshot resume (state-carrying families): skip the
+        # already-computed prefix, re-ship the wire from the window floor
+        self._resume: Optional[Dict[str, Any]] = None
+        if resume is not None:
+            if not self.caps.resumable:
+                engine._note_resume_unsupported()
+                raise PrefillModeError(
+                    f"{engine.cfg.name}: mid-stream resume is not supported "
+                    f"for family {self.caps.family!r}")
+            if not self.chunked_compute:
+                raise PrefillModeError(
+                    "resume requires incremental chunked compute")
+            if int(resume.get("seq_len", -1)) != self.seq_len:
+                raise PrefillModeError(
+                    "resume snapshot does not match this request")
+            self._resume = resume
         # P-side shared-prefix reuse: replay cached chunks instead of
         # recomputing them, and seed the dense cache so compute resumes
-        # at the divergence point. Only the incremental path can resume
-        # mid-prompt; the final token is always computed (first_token).
+        # at the divergence point. Only safe when every cached row stays
+        # attendable (caps.prefix_cache); the final token is always
+        # computed (first_token).
         self.prefix_tokens = 0
         self._p_store = None
         self._cached_entries: Optional[List[Tuple]] = None
         self._collect: Optional[List[Tuple]] = None
         store = getattr(engine, "host_prefix_store", None)
-        if (store is not None and self.chunked_compute
-                and req.patches is None and req.frames is None):
-            self._p_store = store
-            self._collect = []
-            hit, entries = store.match(req.prompt, self.seq_len - 1)
-            if hit > 0:
-                self.prefix_tokens = hit
-                self._cached_entries = entries
+        if store is not None and self._resume is None:
+            if self.chunked_compute and self.caps.prefix_cache:
+                self._p_store = store
+                self._collect = []
+                hit, entries = store.match(req.prompt, self.seq_len - 1)
+                if hit > 0:
+                    self.prefix_tokens = hit
+                    self._cached_entries = entries
+            else:
+                # a prefix store exists but this stream cannot replay from
+                # it — previously a silent full recompute
+                engine._note_resume_unsupported()
 
     @property
     def done(self) -> bool:
@@ -211,14 +303,18 @@ class PrefillStream:
         c1 = min(c0 + (self.chunk_tokens or self.prefix_tokens),
                  self.prefix_tokens)
         self._next_start = c1
+        self._wire_sent = c1
         eng.stats.prefix_cached_tokens += c1 - c0
         return {"kv": slice_kv_entries(self._cached_entries, c0, c1),
                 "start": c0, "length": c1 - c0, "compute_seconds": 0.0}
 
     # -- monolithic compute, chunked wire ------------------------------- #
     def _next_monolithic(self) -> Dict[str, Any]:
+        compute_s = 0.0
         if self._entries is None:
+            t0 = time.perf_counter()
             package = self.engine.prefill(self.req)
+            compute_s = time.perf_counter() - t0
             self.first_token = package["first_token"]
             self._tail = {"states": package["states"],
                           "cross": package["cross"]}
@@ -236,53 +332,205 @@ class PrefillStream:
             w1 = min(w0 + self.chunk_tokens, self.seq_len)
         self._next_start = w1
         return {"kv": slice_kv_entries(self._entries, w0, w1),
-                "start": w0, "length": w1 - w0, "compute_seconds": 0.0}
+                "start": w0, "length": w1 - w0,
+                "compute_seconds": compute_s}
 
-    # -- incremental compute (attention-only families) ------------------- #
+    # -- incremental compute (all families) ------------------------------ #
+    @property
+    def _wire_floor(self) -> int:
+        """First absolute position the D side can still attend. Sliding-
+        window KV below ``seq_len - window`` is dead weight — never ship."""
+        if self.caps.window:
+            return max(0, self.seq_len - self.caps.window)
+        return 0
+
     def _next_incremental(self) -> Dict[str, Any]:
-        eng, cfg, req = self.engine, self.engine.cfg, self.req
+        """Compute exactly ONE chunk per call (one unit of per-tick P
+        work). When the chunk produced nothing for the wire — pure-SSM
+        layers, or sliding-window positions below the wire floor — the
+        returned package is a zero-``length`` *progress marker* that
+        drivers account but never send."""
+        eng, req = self.engine, self.req
         if eng.failed:
             raise RuntimeError(f"instance {eng.name} is down")
         t0 = time.perf_counter()
         if self._caches is None:
-            # capacity rounded to a chunk multiple: prompts within the same
-            # chunk bucket share one compiled cache shape (_chunk_fn traces
-            # per (cache capacity, chunk length)); entries past seq_len stay
-            # pos=-1 and are masked
-            cap = -(-self.seq_len // self.chunk_tokens) * self.chunk_tokens
-            self._caches = M.init_caches(cfg, 1, cap, cfg.cdtype)
-            if self.prefix_tokens:
-                self._caches = self._preload_caches(self._caches)
+            self._setup_incremental()
         c0 = self._next_start
         c1 = min(c0 + self.chunk_tokens, self.seq_len)
-        tokens = jnp.asarray(req.prompt[c0:c1], jnp.int32)[None]
-        positions = jnp.arange(c0, c1, dtype=jnp.int32)[None]
-        logits, self._caches = eng._chunk_fn(eng.params, tokens, positions,
-                                             self._caches)
+        logits = self._compute_chunk(c0, c1)
+        self._next_start = c1
+        eng.stats.prefill_tokens += c1 - c0
+        eng.stats.prefill_chunks += 1
         if c1 == self.seq_len:
             self.first_token = int(
                 eng._sample(np.asarray(logits[:, -1]), req)[0])
+            self._tail = self._extract_tail()
+        dt = time.perf_counter() - t0
+        eng._note_prefill_compute(dt)
+        if not self.caps.kv_on_wire:
+            # pure-SSM: no attention KV ever lands on the wire — the one
+            # final package declares full coverage, states ride the tail
+            if c1 < self.seq_len:
+                return {"kv": [], "start": c0, "length": 0,
+                        "compute_seconds": dt}
+            return {"kv": [], "start": 0, "length": self.seq_len,
+                    "compute_seconds": dt}
+        w0 = max(self._wire_sent, self._wire_floor)
+        if c1 <= w0:
+            return {"kv": [], "start": c0, "length": 0,
+                    "compute_seconds": dt}
+        entries = self._extract_entries(w0, c1)
+        self._wire_sent = c1
+        return {"kv": entries, "start": w0, "length": c1 - w0,
+                "compute_seconds": dt}
+
+    def _setup_incremental(self) -> None:
+        eng, cfg, req = self.engine, self.engine.cfg, self.req
+        # capacity rounded to a chunk multiple: prompts within the same
+        # chunk bucket share one compiled cache shape (_chunk_fn traces
+        # per (cache capacity, chunk length)); entries past seq_len stay
+        # pos=-1 and are masked. full_capacity keeps sliding-window layers
+        # dense (slot == position) — the window is enforced by attention
+        # masking, never by ring eviction mid-prompt.
+        cap = -(-self.seq_len // self.chunk_tokens) * self.chunk_tokens
+        mem = eng.mem_len if cfg.is_enc_dec else 0
+        self._caches = M.init_caches(cfg, 1, cap, cfg.cdtype, mem_len=mem,
+                                     full_capacity=True)
+        if req.frames is not None:
+            # non-resumable encoder preamble: run the encoder on P once,
+            # seed every decoder layer's cross-attention K/V
+            memory = eng._encode_fn(eng.params, jnp.asarray(req.frames)[None])
+            self._seed_cross(memory)
+        if req.patches is not None:
+            # vision prefix: merge patch + token embeddings once; chunks
+            # slice the merged sequence (absolute positions span both)
+            self._emb = eng._embed_fn(
+                eng.params, jnp.asarray(req.patches)[None],
+                jnp.asarray(req.prompt, jnp.int32)[None])
+        if self.prefix_tokens:
+            self._caches = self._preload_caches(self._caches)
+        if self._resume is not None:
+            self._apply_resume(self._resume)
+
+    def _seed_cross(self, memory: jax.Array) -> None:
+        eng = self.engine
+        cross = eng._cross_kv_fn(eng.params, memory)
+        mem = memory.shape[1]
+        caches = [list(g) for g in self._caches]
+        for (gi, pi), (mk, mv) in cross.items():
+            c = dict(caches[gi][pi])
+            c["cross_k"] = c["cross_k"].at[:, :, :mem].set(
+                mk.astype(c["cross_k"].dtype))
+            c["cross_v"] = c["cross_v"].at[:, :, :mem].set(
+                mv.astype(c["cross_v"].dtype))
+            c["mem_len"] = jnp.full_like(c["mem_len"], mem)
+            caches[gi][pi] = c
+        self._caches = tuple(tuple(g) for g in caches)
+
+    def _compute_chunk(self, c0: int, c1: int) -> jax.Array:
+        eng = self.engine
+        positions = jnp.arange(c0, c1, dtype=jnp.int32)[None]
+        if self._emb is not None:
+            logits, self._caches = eng._chunk_embeds_fn(
+                eng.params, self._emb[:, c0:c1], positions, self._caches)
+        else:
+            tokens = jnp.asarray(self.req.prompt[c0:c1], jnp.int32)[None]
+            logits, self._caches = eng._chunk_fn(eng.params, tokens,
+                                                 positions, self._caches)
+        return logits
+
+    def _extract_entries(self, w0: int, w1: int) -> List[Tuple]:
+        """Wire entries for absolute positions [w0, w1) — slot == position
+        because incremental caches are full-capacity."""
         entries = []
-        for gi, g in enumerate(M.block_groups(cfg)):
-            for pi, _kind in enumerate(g.kinds):
+        for gi, g in enumerate(M.block_groups(self.engine.cfg)):
+            for pi, kind in enumerate(g.kinds):
+                if kind in ("ssd", "rglru"):
+                    continue
                 c = self._caches[gi][pi]
-                if cfg.attention_kind == "mla":
+                self_c = c["self"] if isinstance(c, dict) else c
+                if self.caps.latent_kv:
                     entries.append(("mla", gi, pi, {
-                        "ckv": np.asarray(c.ckv[:, 0, c0:c1]),
-                        "kpe": np.asarray(c.kpe[:, 0, c0:c1]),
-                        "start": c0}))
+                        "ckv": np.asarray(self_c.ckv[:, 0, w0:w1]),
+                        "kpe": np.asarray(self_c.kpe[:, 0, w0:w1]),
+                        "start": w0}))
                 else:
                     entries.append(("kv", gi, pi, {
-                        "k": np.asarray(c.k[:, 0, c0:c1]),
-                        "v": np.asarray(c.v[:, 0, c0:c1]),
-                        "start": c0}))
-        self._next_start = c1
-        dt = time.perf_counter() - t0
-        eng.stats.prefill_tokens += c1 - c0
-        eng.stats.prefill_chunks += 1
-        eng.stats.prefill_seconds += dt
-        return {"kv": entries, "start": c0, "length": c1 - c0,
-                "compute_seconds": dt}
+                        "k": np.asarray(self_c.k[:, 0, w0:w1]),
+                        "v": np.asarray(self_c.v[:, 0, w0:w1]),
+                        "start": w0}))
+        return entries
+
+    def _extract_tail(self) -> Dict[str, Any]:
+        """States / cross-KV that ride with finalize (same shape as the
+        monolithic ``_package_handoff`` tail)."""
+        states, cross = [], []
+        for gi, g in enumerate(M.block_groups(self.engine.cfg)):
+            for pi, kind in enumerate(g.kinds):
+                c = self._caches[gi][pi]
+                if kind in ("ssd", "rglru"):
+                    states.append(("state", gi, pi,
+                                   jax.tree.map(lambda x: x[:, 0], c)))
+                elif isinstance(c, dict):                  # enc-dec cross
+                    cross.append((gi, pi, {
+                        "cross_k": c["cross_k"][:, 0],
+                        "cross_v": c["cross_v"][:, 0],
+                        "mem_len": c["mem_len"][:, 0]}))
+        return {"states": states, "cross": cross}
+
+    # -- mid-stream snapshot resume (state-carrying families) ------------ #
+    def snapshot(self) -> Optional[Dict[str, Any]]:
+        """Portable mid-stream progress: recurrent/SSM layer states plus
+        the KV rows still inside the sliding window. Replaying it on a
+        fresh stream (same request, same params) skips recomputing the
+        first ``next_start`` prompt tokens after a failure."""
+        if not (self.caps.resumable and self.chunked_compute):
+            return None
+        if self._caches is None or self._next_start <= 0 or self.done:
+            return None
+        ns = self._next_start
+        lo = max(0, ns - self.caps.window) if self.caps.window else ns
+        states, kv = [], []
+        for gi, g in enumerate(M.block_groups(self.engine.cfg)):
+            for pi, kind in enumerate(g.kinds):
+                c = self._caches[gi][pi]
+                if kind in ("ssd", "rglru"):
+                    states.append((gi, pi, jax.tree.map(np.asarray, c)))
+                else:
+                    self_c = c["self"] if isinstance(c, dict) else c
+                    kv.append((gi, pi, {
+                        "k": np.asarray(self_c.k[:, :, lo:ns]),
+                        "v": np.asarray(self_c.v[:, :, lo:ns])}))
+        return {"seq_len": self.seq_len, "next_start": ns,
+                "row_start": lo, "states": states, "kv": kv}
+
+    def _apply_resume(self, snap: Dict[str, Any]) -> None:
+        ns = int(snap["next_start"])
+        s0 = int(snap["row_start"])
+        caches = [list(g) for g in self._caches]
+        for gi, pi, st in snap["states"]:
+            old = caches[gi][pi]
+            caches[gi][pi] = jax.tree.map(
+                lambda o, n: jnp.asarray(n, o.dtype), old, st)
+        for gi, pi, ent in snap["kv"]:
+            c = caches[gi][pi]
+            self_c = c["self"] if isinstance(c, dict) else c
+            pos = jnp.broadcast_to(
+                jnp.arange(s0, ns, dtype=self_c.pos.dtype),
+                self_c.pos[:, :, s0:ns].shape)
+            new_self = dataclasses.replace(
+                self_c,
+                k=self_c.k.at[:, :, s0:ns].set(
+                    jnp.asarray(ent["k"], self_c.k.dtype)),
+                v=self_c.v.at[:, :, s0:ns].set(
+                    jnp.asarray(ent["v"], self_c.v.dtype)),
+                pos=self_c.pos.at[:, :, s0:ns].set(pos))
+            caches[gi][pi] = ({**c, "self": new_self}
+                              if isinstance(c, dict) else new_self)
+        self._caches = tuple(tuple(g) for g in caches)
+        self._next_start = ns
+        self.engine.stats.resumed_tokens += ns
 
     def _preload_caches(self, caches):
         """Seed the dense chunked-prefill cache with the replayed prefix
@@ -398,23 +646,56 @@ class Engine:
             dense prompt-capacity cache (retraced per distinct chunk len)."""
             return M.decode_step(params, cfg, tokens, positions, caches)
 
+        @jax.jit
+        def _prefill_chunk_embeds(params, embeds, positions, caches):
+            """Chunked prefill over precomputed embeddings (vision prefix)."""
+            return M.decode_step_embeds(params, cfg, embeds, positions, caches)
+
+        @jax.jit
+        def _encode(params, frames):
+            """Encoder preamble of a chunked enc-dec prefill."""
+            return M.encode(params, cfg, frames)
+
+        @jax.jit
+        def _cross_kv(params, memory):
+            return M.encoder_cross_kv(params, cfg, memory)
+
+        @jax.jit
+        def _merged_embeds(params, patches, tokens):
+            emb = M.embed_tokens(params, cfg, tokens)
+            return jnp.concatenate([patches.astype(cfg.cdtype), emb], axis=1)
+
         self._prefill_fn = _prefill
         self._decode_fn = _decode
         self._chunk_fn = _prefill_chunk
+        self._chunk_embeds_fn = _prefill_chunk_embeds
+        self._encode_fn = _encode
+        self._cross_kv_fn = _cross_kv
+        self._embed_fn = _merged_embeds
         self._place_fn = jax.jit(_place, donate_argnums=(0,))
 
     @property
     def supports_chunked_prefill(self) -> bool:
         """Incremental chunk compute is a model-structure property — see
-        ModelConfig.supports_chunked_prefill."""
-        return self.cfg.supports_chunked_prefill
+        ModelConfig.prefill_capabilities."""
+        return self.prefill_capabilities().incremental
+
+    def prefill_capabilities(self) -> PrefillCapabilities:
+        """What this instance's family supports on the prefill path — a
+        frozen descriptor consumed (not introspected) by the scheduler,
+        router and planner, mirroring the connector ``capabilities()``
+        convention."""
+        return self.cfg.prefill_capabilities()
 
     def prefill_stream(self, req: Request,
                        chunk_tokens: Optional[int] = None,
-                       chunked_compute: Optional[bool] = None
+                       chunked_compute: Optional[bool] = None,
+                       mode: Optional[PrefillMode] = None,
+                       resume: Optional[Dict[str, Any]] = None
                        ) -> PrefillStream:
         """Start a resumable (chunked) prefill for ``req``."""
-        return PrefillStream(self, req, chunk_tokens, chunked_compute)
+        return PrefillStream(self, req, chunk_tokens, chunked_compute,
+                             mode=mode, resume=resume)
 
     # ------------------------------------------------------------------ #
     # Prefill (P role)
@@ -444,8 +725,31 @@ class Engine:
         package["seq_len"] = plen
         self.stats.prefill_tokens += plen
         self.stats.prefill_chunks += 1
-        self.stats.prefill_seconds += time.perf_counter() - t0
+        self._note_prefill_compute(time.perf_counter() - t0)
         return package
+
+    def _note_prefill_compute(self, dt: float) -> None:
+        """Account prefill compute time. On an integrated (role="both")
+        instance, compute spent while decode-ready sequences sat waiting
+        is measured decode-stall — the interference disaggregation
+        removes (~0 on pure P or pure D roles)."""
+        self.stats.prefill_seconds += dt
+        if self.role == "both" and any(
+                r is not None and self.slot_ready[i]
+                for i, r in enumerate(self.slot_req)):
+            self.stats.contention_stall_seconds += dt
+
+    def _note_resume_unsupported(self) -> None:
+        """A request wanted prefix-cache replay or mid-stream resume but
+        this family cannot support it — count every occurrence, log once
+        per (family, attention_kind)."""
+        self.stats.resume_unsupported += 1
+        key = (self.cfg.family, self.cfg.attention_kind)
+        if key not in _RESUME_WARNED:
+            _RESUME_WARNED.add(key)
+            log.warning(
+                "family %s (attention=%s): prefix-cache replay / mid-stream "
+                "resume unsupported — falling back to full recompute", *key)
 
     def _package_handoff(self, caches, seq_len: int) -> Dict[str, Any]:
         """Extract per-layer canonical KV (+ states / cross) for transfer."""
@@ -501,9 +805,10 @@ class Engine:
                 and seq_len + new_tokens <= self.max_seq_len)
 
     def _prefix_eligible(self, req: Request) -> bool:
-        """Prefix reuse needs resumable (incremental) prefill semantics
-        and a pure-token prompt — mirrors PrefillStream's gate."""
-        return (self.supports_chunked_prefill
+        """Prefix reuse needs every cached row to stay attendable across
+        the whole decode (caps.prefix_cache) and a pure-token prompt —
+        mirrors PrefillStream's gate."""
+        return (self.prefill_capabilities().prefix_cache
                 and req.patches is None and req.frames is None)
 
     def reserve_sequence(self, req: Request, seq_len: int, *,
@@ -552,6 +857,11 @@ class Engine:
             prefix_tokens = match.tokens
             block_ids = shared + private
         else:
+            if (use_prefix_cache and store is not None
+                    and not self._prefix_eligible(req)):
+                # the router asked for prefix reuse but this family's rows
+                # can't be replayed — previously a silent full recompute
+                self._note_resume_unsupported()
             short = nblocks - self.allocator.free_blocks
             if store is not None and short > 0:
                 store.evict(short)

@@ -30,6 +30,19 @@ class WorkloadConfig:
     output_sigma: float = 0.5
     output_min: int = 2
     output_max: int = 16
+    # multimodal mix: fraction of requests carrying encoder input and the
+    # modality payload sizes. modality "audio" attaches ``frames``
+    # (encoder source positions, fixed length — a Whisper-style resampled
+    # window), "vision" attaches ``patches`` (drawn uniformly from
+    # [patch_min, patch_max] — images vary in tiling). ``encoder_d``
+    # is the embedding width of the synthesized frame/patch rows; it must
+    # match the target engine's d_model.
+    multimodal_fraction: float = 0.0
+    modality: str = "audio"         # "audio" | "vision"
+    encoder_d: int = 64
+    frame_len: int = 10
+    patch_min: int = 2
+    patch_max: int = 8
 
 
 @dataclasses.dataclass
@@ -60,12 +73,23 @@ def build_workload(offsets: List[float], cfg: Optional[WorkloadConfig] = None,
                                 cfg.prompt_min, cfg.prompt_max)
     o_lens = _clamped_lognormal(rng, n, cfg.output_mu, cfg.output_sigma,
                                 cfg.output_min, cfg.output_max)
+    mm = rng.random(n) < cfg.multimodal_fraction
     out = []
     for i, off in enumerate(sorted(offsets)):
         prompt = rng.integers(0, cfg.vocab_size,
                               int(p_lens[i])).astype(np.int32)
+        frames = patches = None
+        if mm[i]:
+            if cfg.modality == "audio":
+                frames = rng.standard_normal(
+                    (cfg.frame_len, cfg.encoder_d)).astype(np.float32)
+            else:
+                np_i = int(rng.integers(cfg.patch_min, cfg.patch_max + 1))
+                patches = rng.standard_normal(
+                    (np_i, cfg.encoder_d)).astype(np.float32)
         out.append(ScheduledRequest(
             offset_s=float(off),
             request=Request(req_id=f"{id_prefix}-{i:04d}", prompt=prompt,
-                            max_new_tokens=int(o_lens[i]))))
+                            max_new_tokens=int(o_lens[i]), frames=frames,
+                            patches=patches)))
     return out

@@ -67,6 +67,7 @@ from repro.serving.multiproc.messages import (AbortStream, BeginStream,
                                               StreamAccepted, StreamFailed,
                                               SubmitPrefill, TokenEmitted,
                                               WorkerSpec, WorkerStats)
+from repro.serving.engine import PrefillMode
 from repro.serving.request import Request, State
 from repro.serving.router import (AdmissionConfig, should_admit,
                                   update_ttft_ema)
@@ -195,6 +196,7 @@ class ClusterRuntime:
                  codec: str = "fixed",
                  connector_kwargs: Optional[Dict[str, Any]] = None,
                  prefill_chunk: Optional[int] = 16,
+                 prefill_mode: str = "auto",
                  max_retries: int = 3,
                  stall_timeout_s: float = 120.0,
                  max_respawns: int = 4,
@@ -209,6 +211,8 @@ class ClusterRuntime:
         self._codec = codec
         self._ck = dict(connector_kwargs or {})
         self._prefill_chunk = prefill_chunk
+        # validated here so a typo fails at construction, not in a worker
+        self._prefill_mode = PrefillMode(prefill_mode).value
         self.max_retries = max_retries
         self.stall_timeout_s = stall_timeout_s
         self.max_respawns = max_respawns
@@ -253,6 +257,7 @@ class ClusterRuntime:
                           codec=self._codec,
                           connector_kwargs=self._ck,
                           prefill_chunk=self._prefill_chunk,
+                          prefill_mode=self._prefill_mode,
                           instance_id=iid,
                           jit_cache_dir=self._jit_cache_dir,
                           fault_exit_after_chunks=fault_exit_after_chunks,

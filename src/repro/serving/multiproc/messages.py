@@ -61,6 +61,7 @@ class EngineSpec:
     max_seq_len: int = 512
     role: str = "both"
     prefix_cache: bool = False
+    mem_len: int = 0                # encoder memory positions (enc-dec)
 
     def build(self):
         """Materialize the engine (worker-side only: imports jax)."""
@@ -72,7 +73,7 @@ class EngineSpec:
         return Engine(self.name, self.cfg, params, self.vendor,
                       num_blocks=self.num_blocks, max_batch=self.max_batch,
                       max_seq_len=self.max_seq_len, role=self.role,
-                      prefix_cache=self.prefix_cache)
+                      prefix_cache=self.prefix_cache, mem_len=self.mem_len)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +109,10 @@ class WorkerSpec:
     # or the legacy "pickle" blob)
     codec: str = "fixed"
     prefill_chunk: Optional[int] = 16
+    # prefill mode name ("auto" | "incremental" | "monolithic") resolved to
+    # repro.serving.engine.PrefillMode inside the worker process — shipped
+    # as a string so the spec stays picklable without an engine import
+    prefill_mode: str = "auto"
     heartbeat_s: float = 0.5
     # persistent XLA compilation-cache dir shared by every worker process
     # on this host (None disables): N workers compile each jit program

@@ -120,13 +120,14 @@ class PWorker:
         announce, then the tail + PrefillDone. ``wire_skip`` leading
         tokens (already resident on the stream's D via its prefix store)
         are computed/replayed but never encoded or staged."""
-        from repro.serving.engine import slice_kv_entries
+        from repro.serving.engine import PrefillMode, slice_kv_entries
         spec, eng = self.spec, self.engine
         attempt = req.retries
         meta = {"seq_len": 0, "tp_p": eng.vendor.tp, "wire": self.pipeline.wire}
         skipped_tokens = sent_tokens = sent_bytes = 0
         try:
-            stream = eng.prefill_stream(req, spec.prefill_chunk)
+            stream = eng.prefill_stream(req, spec.prefill_chunk,
+                                        mode=PrefillMode(spec.prefill_mode))
             meta["seq_len"] = stream.seq_len
             index = 0
             while True:
@@ -135,6 +136,12 @@ class PWorker:
                 t_c1 = time.monotonic()
                 if chunk is None:
                     break
+                if not chunk["kv"] and chunk["length"] == 0:
+                    # progress marker: a compute chunk that produced no
+                    # wire rows (states-only family, or a sliding chunk
+                    # below the window floor) — nothing to stage
+                    self._drain_cmds_nowait()
+                    continue
                 start, length = chunk["start"], chunk["length"]
                 if wire_skip > start:
                     cut = min(wire_skip, start + length) - start

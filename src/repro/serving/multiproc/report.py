@@ -145,6 +145,18 @@ def measured_section(runtime: Any, requests: List[Any],
                 runtime.transfer_stats.concurrent_reads_peak,
         },
     }
+    # integrated-baseline honesty metrics, aggregated over workers:
+    # prefill seconds that stalled decode-ready work on role="both"
+    # engines (the interference disaggregation removes — ~0 on a disagg
+    # topology), requests that silently could not use resume/replay, and
+    # prompt tokens recovered from mid-stream snapshots after failures
+    ws = runtime.worker_stats.values()
+    sec["contention_stall_seconds"] = sum(
+        w.get("contention_stall_seconds", 0.0) for w in ws)
+    sec["resume_unsupported"] = int(sum(
+        w.get("resume_unsupported", 0) for w in ws))
+    sec["resumed_tokens"] = int(sum(
+        w.get("resumed_tokens", 0) for w in ws))
     # measured prefix-cache hit ratio: wire tokens skipped over prompt
     # tokens submitted — the honest counterpart of the planner's assumed
     # FrameworkModel.prefix_cache_hit
@@ -178,10 +190,15 @@ def plan_section(plan: Any) -> Dict[str, Any]:
 
 def plan_vs_measured(runtime: Any, requests: List[Any],
                      plan: Any = None,
-                     wall_s: Optional[float] = None) -> Dict[str, Any]:
+                     wall_s: Optional[float] = None,
+                     sim_summary: Optional[Dict[str, Any]] = None
+                     ) -> Dict[str, Any]:
     """Full post-run report: measured cluster behaviour, optionally laid
     against the ``DeploymentPlan`` that launched it (with deltas where
-    the two describe the same quantity)."""
+    the two describe the same quantity). ``sim_summary`` — a
+    ``SimResult.summary()`` dict from the event sim run in the same mode
+    (disagg/integrated) — adds the modeled-vs-measured decode-stall
+    comparison for the integrated baseline."""
     rep: Dict[str, Any] = {"measured": measured_section(runtime, requests,
                                                         wall_s)}
     if plan is not None:
@@ -196,6 +213,11 @@ def plan_vs_measured(runtime: Any, requests: List[Any],
         if "measured_qps" in m:
             rep["deltas"]["qps_vs_capacity"] = \
                 m["measured_qps"] - plan.qps_capacity
+    if sim_summary is not None and "contention_stall_s" in sim_summary:
+        rep["sim"] = dict(sim_summary)
+        rep.setdefault("deltas", {})["contention_stall_vs_modeled_s"] = \
+            rep["measured"]["contention_stall_seconds"] - \
+            sim_summary["contention_stall_s"]
     return rep
 
 
@@ -228,6 +250,15 @@ def format_report(rep: Dict[str, Any]) -> str:
             f"  prefix cache {m['transfer']['prefix_hit_tokens']} wire "
             f"tokens skipped (hit ratio {m['prefix_hit_ratio']:.2f}, "
             f"{m['transfer']['bytes_saved']} B saved)")
+    if m.get("contention_stall_seconds"):
+        lines.append(
+            f"  contention   {m['contention_stall_seconds'] * 1e3:.1f} ms "
+            f"decode stalled behind prefill (integrated baseline)")
+    if m.get("resumed_tokens") or m.get("resume_unsupported"):
+        lines.append(
+            f"  resume       {m.get('resumed_tokens', 0)} tokens recovered "
+            f"from snapshots, {m.get('resume_unsupported', 0)} requests "
+            f"fell back to full recompute")
     if "measured_qps" in m:
         lines.append(f"  throughput   {m['measured_qps']:.2f} req/s "
                      f"over {m['wall_s']:.1f} s")

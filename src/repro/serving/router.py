@@ -118,7 +118,7 @@ def kv_block_bytes(cfg: ModelConfig, vendor: VendorProfile) -> int:
     enough to compare *free KV-pool bytes* across heterogeneous vendors
     (different block sizes / dtypes) without touching device pools."""
     itemsize = np.dtype(vendor.kv_dtype).itemsize
-    if cfg.attention_kind == "mla":
+    if cfg.prefill_capabilities().latent_kv:
         per_token = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
     else:
         per_token = 2 * max(cfg.num_kv_heads, 1) * cfg.hd

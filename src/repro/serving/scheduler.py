@@ -27,7 +27,7 @@ from typing import TYPE_CHECKING, Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.serving.engine import Engine
+from repro.serving.engine import Engine, PrefillMode
 from repro.serving.request import Request, State
 
 if TYPE_CHECKING:                      # avoid core <-> serving import cycle
@@ -110,8 +110,14 @@ class PrefillFlightLoop:
     def __init__(self, sched: "GlobalScheduler"):
         self.sched = sched
         self.inflight: List[_Flight] = []
+        # engines that ran prefill compute this tick — integrated
+        # (role="both") engines in this set defer their decode step
+        # (prefill-priority interleaving; the stall is measured in
+        # EngineStats.contention_stall_seconds)
+        self.prefilled: set = set()
 
     def pump(self, emitted: List[Tuple[Request, int]]) -> None:
+        self.prefilled.clear()
         self._dispatch(emitted)
         self._advance_all(emitted)
 
@@ -142,11 +148,19 @@ class PrefillFlightLoop:
                 except _DISPATCH_ERRORS:
                     s._requeue(req, p_eng)
                     continue
+                self.prefilled.add(p_eng.name)
                 s._emit_first_token(req, p_eng, d_eng,
                                     meta["first_token"], emitted)
                 continue
+            # a mid-stream snapshot from an aborted flight resumes only on
+            # the same P (its params produced the snapshot's states/KV)
+            snap = s._resume_snaps.pop(req.req_id, None)
+            if snap is not None and snap.get("p_name") != p_eng.name:
+                snap = None
             try:
-                stream = p_eng.prefill_stream(req, s.prefill_chunk)
+                stream = p_eng.prefill_stream(req, s.prefill_chunk,
+                                              mode=s.prefill_mode,
+                                              resume=snap)
                 handoff = s.pipeline.begin_handoff(
                     req, p_eng, d_eng, stream.seq_len,
                     compute_overlapped=stream.chunked_compute)
@@ -187,6 +201,11 @@ class PrefillFlightLoop:
             chunk = fl.stream.next_chunk()
             if chunk is None:
                 break
+            if chunk.get("compute_seconds", 0.0) > 0.0:
+                self.prefilled.add(fl.p.name)
+            if not chunk["kv"] and chunk["length"] == 0:
+                sent += 1        # compute-only progress marker: consumes
+                continue         # the tick budget, never hits the wire
             fl.handoff.send_chunk(chunk)
             fl.req.chunks_streamed += 1
             s.stats.chunks_streamed += 1
@@ -217,9 +236,16 @@ class DecodeLoop:
 
     def pump(self, emitted: List[Tuple[Request, int]]) -> None:
         s = self.sched
+        prefilled = s.prefill_loop.prefilled
         for e in s._routable(s.d_pool) + \
                 [s.d_pool[n] for n in list(s._draining)
                  if n in s.d_pool and not s.d_pool[n].failed]:
+            # prefill-priority interleaving: an integrated engine that
+            # spent this tick on prefill compute defers its decode step —
+            # the paper's P/D interference, measured (not modeled) in
+            # EngineStats.contention_stall_seconds
+            if e.role == "both" and e.name in prefilled:
+                continue
             # reserved-but-not-ready flight slots don't decode — timing a
             # no-op step would pollute the straggler-latency EMA
             active = any(r is not None and e.slot_ready[i]
@@ -248,11 +274,17 @@ class GlobalScheduler:
                  prefill_chunk: Optional[int] = None,
                  chunk_budget: int = 1,
                  repage_budget: Optional[int] = None,
-                 max_retries: int = 8):
+                 max_retries: int = 8,
+                 prefill_mode: PrefillMode = PrefillMode.AUTO):
         """``prefill_chunk``: tokens per streamed prefill chunk. ``None``
         keeps the monolithic single-tick handoff; set it to stream long
         prefills across ticks (``chunk_budget`` chunks per flight per tick)
         so decode steps interleave with a long prompt's prefill.
+
+        ``prefill_mode``: explicit compute mode for streamed prefills —
+        AUTO picks incremental when the family supports it and the chunk
+        subdivides the prompt; INCREMENTAL/MONOLITHIC force it (an
+        unsupported combination raises ``PrefillModeError`` at dispatch).
 
         ``repage_budget``: D-side re-pages per flight per tick — a budget
         *separate* from ``chunk_budget``, so wire time (chunks in flight on
@@ -269,6 +301,10 @@ class GlobalScheduler:
         # 0/negative = monolithic, same as None
         self.prefill_chunk = prefill_chunk \
             if prefill_chunk is not None and prefill_chunk > 0 else None
+        self.prefill_mode = prefill_mode
+        # mid-stream snapshots of aborted flights, keyed by req_id —
+        # state-carrying families resume instead of recomputing
+        self._resume_snaps: Dict[str, Dict] = {}
         self.chunk_budget = max(chunk_budget, 1)
         self.repage_budget = repage_budget \
             if repage_budget is None else max(repage_budget, 1)
@@ -367,6 +403,14 @@ class GlobalScheduler:
                 e.recover()
 
     def _abort_flight(self, fl: _Flight) -> None:
+        if not fl.p.failed:
+            # a healthy P aborting (D died, wire failed) keeps its chunk
+            # progress: resumable families snapshot states + window KV so
+            # the retry skips the already-computed prefix
+            snap = fl.stream.snapshot()
+            if snap is not None:
+                snap["p_name"] = fl.p.name
+                self._resume_snaps[fl.req.req_id] = snap
         fl.handoff.abort()
         self.prefill_loop.inflight.remove(fl)
         self._requeue(fl.req, fl.p)

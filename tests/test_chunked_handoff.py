@@ -131,9 +131,9 @@ def test_streamed_total_bytes_match_monolithic():
 
 
 def test_no_empty_chunks_for_ring_or_states_families():
-    """Sliding-window entries only cover the last `window` tokens — the
-    stream must fast-forward past the evicted prefix instead of shipping
-    empty chunks; states-only (SSM) families ship one chunk total."""
+    """Decode only attends the last `window` tokens of a sliding prompt —
+    the stream computes the whole prompt but ships nothing below the
+    window floor; states-only (SSM) families ship one chunk total."""
     vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
 
     cfg = TINY_FAMILIES["sliding"]            # window 8
@@ -141,8 +141,9 @@ def test_no_empty_chunks_for_ring_or_states_families():
     p, d = _pair(cfg, params, vd)
     pipe = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
     meta = pipe.handoff_streamed(_req(cfg, plen=21), p, d, chunk_tokens=4)
-    # ring keeps [13, 21): two 4-token chunks, zero empty ones
-    assert meta["chunks"] == 2
+    # wire floor 13: chunks [13,16) [16,20) [20,21), zero empty ones
+    assert meta["chunks"] == 3
+    assert p.stats.prefill_chunks == 6        # but every chunk computed
 
     cfg = TINY_FAMILIES["ssm"]
     params = M.init_params(jax.random.key(1), cfg)
@@ -150,18 +151,32 @@ def test_no_empty_chunks_for_ring_or_states_families():
     pipe = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
     meta = pipe.handoff_streamed(_req(cfg, plen=21), p, d, chunk_tokens=4)
     assert meta["chunks"] == 1                # no KV to stream chunk-wise
+    assert p.stats.prefill_chunks == 6        # state carried across chunks
 
 
-def test_explicit_chunked_compute_on_unsupported_family_fails_fast():
-    """Forcing chunked_compute=True on a ring-buffer family would silently
-    materialize missing KV — must raise instead."""
-    cfg = TINY_FAMILIES["sliding"]
-    params = M.init_params(jax.random.key(1), cfg)
+def test_unsupported_prefill_mode_fails_fast():
+    """Capability mismatches must raise the typed PrefillModeError, not
+    silently degrade: INCREMENTAL without a chunk size, and resume on a
+    family that cannot carry state."""
+    from repro.serving.engine import PrefillMode, PrefillModeError
     vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+
+    cfg = TINY_FAMILIES["dense"]
+    params = M.init_params(jax.random.key(1), cfg)
     p, _ = _pair(cfg, params, vd)
-    with pytest.raises(ValueError, match="not.*supported"):
+    with pytest.raises(PrefillModeError, match="chunk_tokens"):
+        p.prefill_stream(_req(cfg, plen=21), mode=PrefillMode.INCREMENTAL)
+    with pytest.raises(PrefillModeError, match="mode"):
         p.prefill_stream(_req(cfg, plen=21), chunk_tokens=4,
-                         chunked_compute=True)
+                         mode="incremental")
+    # dense is not resumable (no state, no window): a snapshot is refused
+    with pytest.raises(PrefillModeError, match="resume"):
+        p.prefill_stream(_req(cfg, plen=21), chunk_tokens=4,
+                         resume={"seq_len": 21, "next_start": 8,
+                                 "row_start": 8, "states": [], "kv": []})
+    assert p.stats.resume_unsupported == 1
+    # PrefillModeError is a ValueError — legacy callers still catch it
+    assert issubclass(PrefillModeError, ValueError)
 
 
 def test_flight_aborts_on_pinned_pool_exhaustion():
@@ -208,14 +223,28 @@ def test_permanent_failure_marks_request_failed():
     assert all(r is None for r in d.slot_req)
 
 
-def test_supports_chunked_prefill_matrix():
-    """The chunkability predicate is shared by the engine and the planner's
-    overlap gate — pin down which families incrementally compute."""
-    expect = {"dense": True, "dense-bias-qknorm": True, "moe": True,
-              "mla": True, "sliding": False, "hybrid": False, "ssm": False,
-              "encdec": False, "vlm": False}
+def test_prefill_capabilities_matrix():
+    """The capability descriptor is shared by the engine, scheduler and
+    planner — pin down each family's (incremental, resumable,
+    prefix_cache, encoder_preamble, kv_on_wire)."""
+    expect = {
+        "dense":            (True, False, True,  False, True),
+        "dense-bias-qknorm": (True, False, True,  False, True),
+        "moe":              (True, False, True,  False, True),
+        "mla":              (True, False, True,  False, True),
+        "sliding":          (True, True,  False, False, True),
+        "hybrid":           (True, True,  False, False, True),
+        "ssm":              (True, True,  False, False, False),
+        "encdec":           (True, False, False, True,  True),
+        "vlm":              (True, False, False, True,  True),
+    }
     for fam, want in expect.items():
-        assert TINY_FAMILIES[fam].supports_chunked_prefill == want, fam
+        caps = TINY_FAMILIES[fam].prefill_capabilities()
+        got = (caps.incremental, caps.resumable, caps.prefix_cache,
+               caps.encoder_preamble, caps.kv_on_wire)
+        assert got == want, (fam, got)
+        # every family now computes incrementally
+        assert TINY_FAMILIES[fam].supports_chunked_prefill, fam
 
 
 def test_zero_chunk_tokens_means_monolithic():

@@ -55,6 +55,40 @@ def test_workload_deterministic_under_seed():
         assert cfg.output_min <= it.request.max_new_tokens <= cfg.output_max
 
 
+def test_multimodal_workload_synthesis():
+    """The encoder-tokens term the planner learns needs a workload that
+    actually carries encoder input: audio requests get fixed-length frame
+    embeddings, vision requests a variable patch count, deterministically
+    under the seed; text-only (fraction 0) stays payload-free."""
+    offs = poisson_arrivals(5.0, 5.0, seed=1)
+    audio = WorkloadConfig(multimodal_fraction=1.0, modality="audio",
+                           encoder_d=64, frame_len=10)
+    w1 = build_workload(offs, audio, seed=9)
+    w2 = build_workload(offs, audio, seed=9)
+    for a, b in zip(w1, w2):
+        assert a.request.frames.shape == (10, 64)
+        assert a.request.frames.dtype == np.float32
+        assert a.request.patches is None
+        assert np.array_equal(a.request.frames, b.request.frames)
+
+    vision = WorkloadConfig(multimodal_fraction=1.0, modality="vision",
+                            encoder_d=32, patch_min=2, patch_max=8)
+    counts = {it.request.patches.shape[0]
+              for it in build_workload(offs, vision, seed=9)}
+    assert counts <= set(range(2, 9)) and len(counts) > 1
+    for it in build_workload(offs, vision, seed=9):
+        assert it.request.frames is None
+        assert it.request.patches.shape[1] == 32
+
+    mixed = WorkloadConfig(multimodal_fraction=0.5, modality="audio")
+    n_mm = sum(it.request.frames is not None
+               for it in build_workload(offs, mixed, seed=9))
+    assert 0 < n_mm < len(offs)
+
+    for it in build_workload(offs, WorkloadConfig(), seed=9):
+        assert it.request.frames is None and it.request.patches is None
+
+
 # --------------------------------------------------------------------- #
 # admission policy (pure)
 # --------------------------------------------------------------------- #

@@ -1,0 +1,350 @@
+"""Family × capability prefill guarantees (the capability-declared
+prefill API).
+
+  1. *wire sweep*: incremental (chunk-at-a-time) compute is token-exact
+     vs monolithic compute over the SAME wire format for state-carrying
+     and multimodal families, on raw/bf16/int8 wires.
+  2. *process boundary*: the same chunked parity holds through the
+     multi-process runtime (P and D in separate OS processes).
+  3. *resume*: a D failure mid-stream on a state-carrying family retries
+     from the flight's layer-state snapshot — measured in
+     ``EngineStats.resumed_tokens`` — and still emits exact tokens.
+  4. *honest integrated baseline*: a ``role="both"`` engine under mixed
+     load measures nonzero decode-stall seconds; the disaggregated
+     topology measures zero. The planner's event sim models the same
+     quantity for the plan-vs-measured report.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.compat.precision import WireFormat
+from repro.core.disagg import DisaggPipeline
+from repro.core.kv_transfer import TransferEngine
+from repro.models import model as M
+from repro.serving.engine import Engine, PrefillMode, VendorProfile
+from repro.serving.request import Request, State
+from repro.serving.scheduler import GlobalScheduler
+from tests.conftest import TINY_FAMILIES
+
+WIRES = [WireFormat("raw", "float32"), WireFormat("raw", "bfloat16"),
+         WireFormat("int8")]
+
+_PARAMS = {}
+
+
+def _params(family):
+    if family not in _PARAMS:
+        _PARAMS[family] = M.init_params(jax.random.key(1),
+                                        TINY_FAMILIES[family])
+    return _PARAMS[family]
+
+
+def _req(cfg, plen, rid="r0", max_new=6, seed=3):
+    rng = np.random.default_rng(seed)
+    r = Request(req_id=rid,
+                prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                max_new_tokens=max_new)
+    if cfg.is_enc_dec:
+        r.frames = rng.normal(size=(10, cfg.d_model)).astype(np.float32)
+    if cfg.frontend.kind == "vision":
+        r.patches = rng.normal(size=(cfg.frontend.num_patches,
+                                     cfg.d_model)).astype(np.float32)
+    return r
+
+
+def _mem(cfg):
+    return 10 if cfg.is_enc_dec else 0
+
+
+def _pair(cfg, params, mem_len=0):
+    vp = VendorProfile("B", block_size=8, layout="nhbd",
+                       kv_dtype="float32", tp=2)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    p = Engine("P0", cfg, params, vp, num_blocks=64, max_batch=4,
+               max_seq_len=64, mem_len=mem_len, role="prefill")
+    d = Engine("D0", cfg, params, vd, num_blocks=64, max_batch=4,
+               max_seq_len=64, mem_len=mem_len, role="decode")
+    return p, d
+
+
+# --------------------------------------------------------------------- #
+# 1. wire sweep: incremental == monolithic on every wire format
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("family", ["sliding", "hybrid", "encdec"])
+@pytest.mark.parametrize("wire", WIRES, ids=lambda w: f"{w.kind}-{w.dtype}")
+def test_incremental_equals_monolithic_on_same_wire(family, wire):
+    """The tentpole claim, per wire format: chunk-at-a-time compute (with
+    window masking / carried layer state / encoder preamble) must emit
+    the tokens the one-pass compute emits over the identical wire."""
+    cfg = TINY_FAMILIES[family]
+    params = _params(family)
+
+    def run(mode):
+        p, d = _pair(cfg, params, mem_len=_mem(cfg))
+        pipe = DisaggPipeline(TransferEngine(), wire)
+        meta = pipe.handoff_streamed(_req(cfg, plen=21), p, d,
+                                     chunk_tokens=5, mode=mode)
+        toks = [meta["first_token"]]
+        for _ in range(4):
+            toks.append(int(d.decode_step()[0][2]))
+        return toks, p.stats.prefill_chunks
+
+    mono, mono_chunks = run(PrefillMode.MONOLITHIC)
+    inc, inc_chunks = run(PrefillMode.INCREMENTAL)
+    assert inc == mono, (family, wire.kind, wire.dtype)
+    assert mono_chunks == 1 and inc_chunks == 5      # ceil(21/5) vs one pass
+
+
+# --------------------------------------------------------------------- #
+# 2. process boundary: chunked parity through the multiproc runtime
+# --------------------------------------------------------------------- #
+def _serve_single(cfg, params, reqs, mem_len=0, prefill_chunk=4):
+    p, d = _pair(cfg, params, mem_len=mem_len)
+    pipe = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
+    sched = GlobalScheduler(pipe, prefill_chunk=prefill_chunk)
+    sched.add_instance(p)
+    sched.add_instance(d)
+    done = sched.run(reqs, max_ticks=800)
+    assert len(done) == len(reqs)
+    return {r.req_id: list(r.output_tokens) for r in reqs}
+
+
+@pytest.mark.parametrize("family", ["sliding", "ssm", "encdec"])
+def test_multiproc_chunked_parity(family):
+    """State-carrying and encoder-preamble families through real OS
+    processes (chunked compute, staged shared-memory wire, tail package
+    with states/cross rows) match the single-process scheduler."""
+    from repro.serving.multiproc import EngineSpec, serve_two_process
+    cfg = TINY_FAMILIES[family]
+    params = _params(family)
+    mem = _mem(cfg)
+    mk = lambda: [_req(cfg, plen=(21, 9, 14)[i], rid=f"q{i}", seed=i)
+                  for i in range(3)]
+    ref = _serve_single(cfg, params, mk(), mem_len=mem)
+
+    vp = VendorProfile("B", block_size=8, layout="nhbd",
+                       kv_dtype="float32", tp=2)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    common = dict(cfg=cfg, params_seed=1, num_blocks=64, max_batch=4,
+                  max_seq_len=64, mem_len=mem)
+    reqs = mk()
+    tokens, rt = serve_two_process(
+        EngineSpec(name="P0", vendor=vp, role="prefill", **common),
+        EngineSpec(name="D0", vendor=vd, role="decode", **common),
+        reqs, prefill_chunk=4, max_wall_s=300.0)
+    assert rt.stats.finished == len(reqs)
+    assert tokens == ref, family
+
+
+# --------------------------------------------------------------------- #
+# 3. resume: mid-stream failure retries from the layer-state snapshot
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("family", ["hybrid", "sliding"])
+def test_d_failure_resumes_from_snapshot(family):
+    """Kill the D mid-prefill: the retry on the surviving D reuses the
+    aborted flight's snapshot (carried rglru/window state) instead of
+    recomputing from token 0 — and still finishes token-exact."""
+    cfg = TINY_FAMILIES[family]
+    params = _params(family)
+    ref = _serve_single(cfg, params, [_req(cfg, plen=24, rid="rq",
+                                           max_new=4, seed=5)])["rq"]
+
+    vp = VendorProfile("B", block_size=8, layout="nhbd",
+                       kv_dtype="float32", tp=2)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    p = Engine("P0", cfg, params, vp, num_blocks=64, max_batch=4,
+               max_seq_len=64, role="prefill")
+    d0 = Engine("D0", cfg, params, vd, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="decode")
+    d1 = Engine("D1", cfg, params, vd, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="decode")
+    pipe = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
+    sched = GlobalScheduler(pipe, prefill_chunk=4, chunk_budget=1)
+    for e in (p, d0, d1):
+        sched.add_instance(e)
+
+    req = _req(cfg, plen=24, rid="rq", max_new=4, seed=5)
+    sched.submit(req)
+    sched.step()
+    sched.step()                        # two 4-token chunks computed
+    assert len(sched.inflight) == 1
+    sched.inflight[0].d.fail()          # decode node dies mid-stream
+    for _ in range(100):
+        if sched.stats.finished >= 1:
+            break
+        sched.step()
+    assert sched.stats.finished == 1 and sched.stats.requeues == 1
+    assert req.state == State.FINISHED
+    assert list(req.output_tokens) == ref, family
+    # the retry really resumed: computed tokens were skipped, and the
+    # resumed stream recomputed less than a from-scratch second pass
+    assert p.stats.resumed_tokens > 0
+    assert p.stats.prefill_tokens < 2 * 24
+
+
+def test_p_failure_discards_snapshot_for_other_p():
+    """A snapshot is engine-local state: when the *P* dies, the retry on
+    a different P must start clean (no resumed tokens), not adopt a
+    snapshot whose device arrays died with the failed engine."""
+    cfg = TINY_FAMILIES["hybrid"]
+    params = _params("hybrid")
+    vp = VendorProfile("B", block_size=8, layout="nhbd",
+                       kv_dtype="float32", tp=2)
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+    p0 = Engine("P0", cfg, params, vp, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="prefill")
+    p1 = Engine("P1", cfg, params, vp, num_blocks=64, max_batch=4,
+                max_seq_len=64, role="prefill")
+    d = Engine("D0", cfg, params, vd, num_blocks=64, max_batch=4,
+               max_seq_len=64, role="decode")
+    pipe = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
+    sched = GlobalScheduler(pipe, prefill_chunk=4, chunk_budget=1)
+    for e in (p0, p1, d):
+        sched.add_instance(e)
+    req = _req(cfg, plen=24, rid="rq", max_new=4, seed=5)
+    sched.submit(req)
+    sched.step()
+    sched.step()
+    victim = sched.inflight[0].p
+    victim.fail()
+    for _ in range(100):
+        if sched.stats.finished >= 1:
+            break
+        sched.step()
+    assert sched.stats.finished == 1
+    survivor = p1 if victim is p0 else p0
+    assert survivor.stats.resumed_tokens == 0
+    assert len(req.output_tokens) == 4
+
+
+# --------------------------------------------------------------------- #
+# 4. honest integrated baseline: measured decode-stall
+# --------------------------------------------------------------------- #
+def test_integrated_measures_contention_disagg_measures_zero():
+    """Mixed load on one role="both" engine: prefill-priority ticks defer
+    ready decode steps, and that interference lands in
+    ``contention_stall_seconds``. The same workload disaggregated
+    measures exactly zero — the paper's motivating asymmetry."""
+    cfg = TINY_FAMILIES["dense"]
+    params = _params("dense")
+    vd = VendorProfile("A", block_size=4, layout="nbhd", kv_dtype="float32")
+
+    def workload():
+        first = _req(cfg, plen=8, rid="warm", max_new=12, seed=1)
+        rest = [_req(cfg, plen=20, rid=f"p{i}", max_new=2, seed=10 + i)
+                for i in range(3)]
+        return first, rest
+
+    # integrated: one engine plays P and D
+    both = Engine("I0", cfg, params, vd, num_blocks=64, max_batch=4,
+                  max_seq_len=64, role="both")
+    pipe = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
+    sched = GlobalScheduler(pipe, prefill_chunk=4, chunk_budget=1)
+    sched.add_instance(both)
+    first, rest = workload()
+    sched.submit(first)
+    for _ in range(4):                  # warm request reaches decode
+        sched.step()
+    for r in rest:                      # prefills arrive mid-decode
+        sched.submit(r)
+    for _ in range(300):
+        if sched.stats.finished == 4:
+            break
+        sched.step()
+    assert sched.stats.finished == 4
+    assert both.stats.contention_stall_seconds > 0.0
+
+    # disaggregated: same workload, separate P and D timelines
+    p, d = _pair(cfg, params)
+    pipe2 = DisaggPipeline(TransferEngine(), WireFormat("raw", "float32"))
+    sched2 = GlobalScheduler(pipe2, prefill_chunk=4, chunk_budget=1)
+    sched2.add_instance(p)
+    sched2.add_instance(d)
+    first, rest = workload()
+    sched2.submit(first)
+    for _ in range(4):
+        sched2.step()
+    for r in rest:
+        sched2.submit(r)
+    for _ in range(300):
+        if sched2.stats.finished == 4:
+            break
+        sched2.step()
+    assert sched2.stats.finished == 4
+    assert p.stats.contention_stall_seconds == 0.0
+    assert d.stats.contention_stall_seconds == 0.0
+
+
+def test_event_sim_models_contention_for_integrated_only():
+    """The planner's event sim exposes the same decode-stall quantity the
+    runtime measures: nonzero for the integrated baseline under load,
+    zero for disagg, and present in ``SimResult.summary()`` so the
+    plan-vs-measured report can diff them."""
+    from repro.core.planner.events import simulate
+    from repro.core.planner.hardware import GPU_A
+    from repro.core.planner.simulator import (FrameworkModel, InstanceModel,
+                                              ParallelStrategy)
+    from repro.core.planner.workload import Workload
+    cfg = TINY_FAMILIES["dense"]
+    m = InstanceModel(cfg, GPU_A, ParallelStrategy(), FrameworkModel())
+    wl = Workload(qps=3000, input_len=64, output_len=32)
+    r_int = simulate(cfg, wl, p_model=m, d_model=m, mode="integrated",
+                     duration_s=1.0)
+    r_dis = simulate(cfg, wl, p_model=m, d_model=m, mode="disagg",
+                     duration_s=1.0)
+    assert r_int.contention_stall_s > 0.0
+    assert r_dis.contention_stall_s == 0.0
+    assert r_int.summary()["contention_stall_s"] == r_int.contention_stall_s
+
+
+def test_report_aggregates_contention_and_resume():
+    """The plan-vs-measured report surfaces the new honesty metrics:
+    per-worker contention/resume stats summed in the measured section,
+    and the modeled-vs-measured stall delta when a sim summary rides
+    along."""
+    from types import SimpleNamespace
+    from repro.core.transport.base import TransferStats
+    from repro.serving.multiproc.report import plan_vs_measured
+    runtime = SimpleNamespace(
+        stats=SimpleNamespace(p_dispatches={"P0": 2}, d_dispatches={"D0": 2},
+                              submitted=2, finished=2, failed=0, shed=0,
+                              requeues=1),
+        worker_stats={
+            "P0": {"contention_stall_seconds": 0.0, "resume_unsupported": 1,
+                   "resumed_tokens": 8},
+            "I0": {"contention_stall_seconds": 0.25, "resume_unsupported": 0,
+                   "resumed_tokens": 0},
+        },
+        transfer_stats=TransferStats(), crashes={}, respawns={})
+    rep = plan_vs_measured(runtime, [], wall_s=1.0,
+                           sim_summary={"contention_stall_s": 0.10})
+    m = rep["measured"]
+    assert m["contention_stall_seconds"] == 0.25
+    assert m["resume_unsupported"] == 1
+    assert m["resumed_tokens"] == 8
+    assert rep["deltas"]["contention_stall_vs_modeled_s"] == \
+        pytest.approx(0.15)
+
+
+def test_planner_encoder_tokens_term():
+    """The cost model charges for the encoder preamble: enc-dec pays the
+    encoder stack over the source length, vision pays the patch rows as
+    prefill tokens, and text-only families ignore the term entirely."""
+    from repro.core.planner.events import kv_wire_bytes_per_token
+    from repro.core.planner.hardware import GPU_A
+    from repro.core.planner.simulator import InstanceModel, ParallelStrategy
+    enc = InstanceModel(TINY_FAMILIES["encdec"], GPU_A, ParallelStrategy())
+    assert enc.prefill_latency(16, encoder_tokens=128) > \
+        enc.prefill_latency(16)
+    vlm = InstanceModel(TINY_FAMILIES["vlm"], GPU_A, ParallelStrategy())
+    assert vlm.prefill_latency(16, encoder_tokens=64) > \
+        vlm.prefill_latency(16)
+    txt = InstanceModel(TINY_FAMILIES["dense"], GPU_A, ParallelStrategy())
+    assert txt.prefill_latency(16, encoder_tokens=64) == \
+        txt.prefill_latency(16)
+    # wire bytes route through the capability descriptor
+    assert kv_wire_bytes_per_token(TINY_FAMILIES["ssm"]) == 0
+    assert kv_wire_bytes_per_token(TINY_FAMILIES["mla"]) < \
+        kv_wire_bytes_per_token(TINY_FAMILIES["dense"])
